@@ -1,0 +1,25 @@
+"""Benchmark harness utilities: each benchmark prints CSV rows
+``name,us_per_call,derived`` where ``derived`` is the paper-comparable
+metric (waste ratio, MFU, cross-ToR share, ...)."""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Callable
+
+
+def timed(fn: Callable, *args, **kwargs):
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def row(name: str, us: float, derived) -> str:
+    if isinstance(derived, float):
+        derived = f"{derived:.6g}"
+    elif not isinstance(derived, str):
+        derived = json.dumps(derived, separators=(",", ":"))
+    line = f"{name},{us:.1f},{derived}"
+    print(line)
+    return line

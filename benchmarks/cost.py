@@ -1,0 +1,45 @@
+"""Paper Table 6/8 + Fig 17d: interconnect cost/power + aggregate cost."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cost_model import (ALL_BOMS, INFINITEHBD_K2, INFINITEHBD_K3,
+                                   NVL72, TPUV4, aggregate_cost, cost_ratio,
+                                   table6)
+from repro.core.hbd_models import default_suite
+from repro.core.trace import iid_fault_sets
+
+from .common import row, timed
+
+
+def run():
+    rows, us = timed(table6)
+    for r in rows:
+        row(f"table6/{r['architecture']}", us / len(rows), r)
+    row("cost_ratio/k2_vs_nvl72", 0.0,
+        {"ours": round(cost_ratio(INFINITEHBD_K2, NVL72), 4),
+         "paper": 0.3086})
+    row("cost_ratio/k2_vs_tpuv4", 0.0,
+        {"ours": round(cost_ratio(INFINITEHBD_K2, TPUV4), 4),
+         "paper": 0.6284})
+
+    # Fig 17d: aggregate cost vs fault ratio on a 3K-GPU cluster (TP-32)
+    bom_for = {"infinitehbd-k2": INFINITEHBD_K2, "infinitehbd-k3":
+               INFINITEHBD_K3, "nvl-72": NVL72, "tpuv4": TPUV4}
+    suite = {m.name: m for m in default_suite(768, 4)}      # 3072 GPUs
+    for fr in (0.0, 0.02, 0.05, 0.08, 0.12, 0.15):
+        out = {}
+        for name, bom in bom_for.items():
+            model = suite[name if name in suite else name]
+            vals = []
+            for faults in iid_fault_sets(768, fr, 5, seed=2):
+                r = model.evaluate(faults, 32)
+                vals.append(aggregate_cost(bom, 3072, r.wasted_gpus,
+                                           r.faulty_gpus))
+            out[name] = round(float(np.mean(vals)) / 1e6, 3)
+        row(f"fig17d/fault{fr:.2f}", 0.0, out)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,24 @@
+"""Paper Fig 16/23: job fault-waiting time share under various job scales."""
+
+from __future__ import annotations
+
+from repro.core.fault_sim import fault_waiting_time
+from repro.core.hbd_models import default_suite
+from repro.core.trace import generate_trace, to_4gpu_trace
+
+from .common import row, timed
+
+
+def run():
+    tr4 = to_4gpu_trace(generate_trace(400, seed=1))
+    for tp in (16, 32):
+        for frac in (0.85, 0.92):
+            job = int(2880 * frac) // tp * tp
+            for model in default_suite(720, 4):
+                w, us = timed(fault_waiting_time, model, tr4, tp, job, 150)
+                row(f"fault_wait/tp{tp}/job{frac}/{model.name}", us,
+                    round(w, 4))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,22 @@
+"""Paper Fig 15: maximal job scale supported by a 2,880-GPU cluster."""
+
+from __future__ import annotations
+
+from repro.core.fault_sim import max_job_scale
+from repro.core.hbd_models import default_suite
+from repro.core.trace import generate_trace, to_4gpu_trace
+
+from .common import row, timed
+
+
+def run():
+    tr4 = to_4gpu_trace(generate_trace(400, seed=1))
+    for tp in (16, 32, 64):
+        for model in default_suite(720, 4):   # 2880 GPUs as in the paper
+            cap, us = timed(max_job_scale, model, tr4, tp, 120)
+            row(f"max_job/tp{tp}/{model.name}", us,
+                {"gpus": int(cap), "fraction": round(cap / 2880, 4)})
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Paper Tables 2/4/5: MFU under optimal parallelism (analytic simulator).
+
+Table 2: Llama 3.1-405B -- optimal TP grows with cluster size; the paper's
+headline is a 3.37x MFU gain over TP-8-capped HBDs at 131072 GPUs.
+Table 4: GPT-MoE TP vs EP under expert imbalance (crossover at ~10%).
+Table 5: GPT-MoE optimal parallelism (EP=1 optimal at 20% imbalance).
+"""
+
+from __future__ import annotations
+
+from repro.core.mfu_sim import (Cluster, GPT_MOE_1T, LLAMA31_405B, search)
+
+from .common import row, timed
+
+PAPER_T2 = {1024: (16, 0.5236, 0.5217), 4096: (16, 0.4668, 0.4282),
+            8192: (32, 0.4247, 0.3512), 16384: (32, 0.3756, 0.2584),
+            32768: (32, 0.3090, 0.1690), 65536: (64, 0.2493, 0.0999),
+            131072: (64, 0.1851, 0.0550)}
+
+
+def run():
+    for n, (p_tp, p_mfu, p_mfu8) in PAPER_T2.items():
+        r, us = timed(search, LLAMA31_405B, Cluster(n))
+        r8, _ = timed(search, LLAMA31_405B, Cluster(n, max_tp=8))
+        row(f"table2/llama405b/{n}", us, {
+            "tp": r.plan.tp, "pp": r.plan.pp, "dp": r.plan.dp,
+            "mfu": round(r.mfu, 4), "mfu_tp8": round(r8.mfu, 4),
+            "improve": round(r.mfu / r8.mfu, 3),
+            "paper": {"tp": p_tp, "mfu": p_mfu,
+                      "improve": round(p_mfu / p_mfu8, 3)}})
+
+    # Table 4: TP vs EP at 4096 GPUs
+    tp_best, us = timed(search, GPT_MOE_1T, Cluster(4096),
+                        global_batch=1536, eps=(1,), imbalance=0.0, vpp=3)
+    row("table4/tp", us, {"mfu": round(tp_best.mfu, 4), "paper": 0.312})
+    for imb, ref in ((0.0, 0.315), (0.1, 0.305), (0.2, 0.298), (0.3, 0.288)):
+        ep, us = timed(search, GPT_MOE_1T, Cluster(4096), global_batch=1536,
+                       eps=(8,), imbalance=imb, vpp=3)
+        row(f"table4/ep8_imb{int(imb*100)}", us,
+            {"mfu": round(ep.mfu, 4), "paper": ref})
+
+    # Table 5: optimal plan incl. EP choices, imbalance 20%
+    paper_t5 = {1024: (16, 1), 2048: (16, 1), 4096: (32, 1),
+                8192: (32, 1), 16384: (64, 1)}
+    for n, (p_tp, p_ep) in paper_t5.items():
+        r, us = timed(search, GPT_MOE_1T, Cluster(n), global_batch=1536,
+                      eps=(1, 2, 4, 8), imbalance=0.2, vpp=3)
+        row(f"table5/gptmoe/{n}", us, {
+            "tp": r.plan.tp, "pp": r.plan.pp, "dp": r.plan.dp,
+            "ep": r.plan.ep, "mfu": round(r.mfu, 4),
+            "paper": {"tp": p_tp, "ep": p_ep}})
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,163 @@
+"""Roofline analysis from the compiled dry-run artifacts (deliverable g).
+
+Per (arch x shape) cell on the single-pod mesh (16 data x 16 model, 256
+chips of TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI):
+
+  compute term    = loop-aware HLO dot FLOPs per device / 197e12
+  memory term     = minimal kernel-aware HBM traffic per device / 819e9
+                    (weights read fwd+bwd + optimizer RW + remat-saved
+                    activations; decode: weights + KV stream.  The raw
+                    XLA-fallback traffic parsed from HLO is reported too --
+                    it overstates TPU traffic because the scan-based
+                    attention materializes per-block state that the Pallas
+                    kernels keep in VMEM.)
+  collective term = loop-aware collective wire bytes per device / 50e9
+
+plus MODEL_FLOPS (6ND train / 2·N_active·D inference) and the useful-compute
+ratio MODEL_FLOPS / HLO_FLOPs that surfaces padding, remat and causal-mask
+waste.  Writes results/roofline.json consumed by EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import ARCHS, SHAPES, get_arch
+
+from .common import row
+
+ROOT = Path(__file__).resolve().parents[1]
+DRYRUN = ROOT / "results" / "dryrun" / "single"
+BASELINE = ROOT / "results" / "dryrun_baseline" / "single"
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+DEVICES = 256
+TP = 16
+
+
+def min_traffic_bytes(cfg, shape) -> float:
+    """Minimal per-device HBM traffic for a TPU-native implementation."""
+    p_total = cfg.param_count()
+    p_tp = p_total / TP              # weights touched per model shard
+    p_dev = p_total / DEVICES        # stored shard (fsdp x tp)
+    if cfg.n_experts and shape.kind != "train":
+        # inference only touches active experts' weights
+        p_tp = cfg.active_param_count() / TP
+    b_loc = max(shape.global_batch // 16, 1)      # per data shard
+    s = shape.seq_len
+    d = cfg.d_model
+
+    if shape.kind == "train":
+        w = (2 + 2) * 2.0 * p_tp          # bf16 weights read fwd + bwd(+remat)
+        opt = 20.0 * p_dev                # master/m/v read+write fp32-ish
+        act = 4.0 * (cfg.num_layers * b_loc * (s / TP) * d * 2.0)
+        return w + opt + act
+    if shape.kind == "prefill":
+        w = 2.0 * p_tp
+        act = 2.0 * cfg.num_layers * b_loc * s * d * 2.0 / TP
+        return w + act
+    # decode: read all (active) weights + stream the KV cache slice
+    w = 2.0 * p_tp
+    kv = 0.0
+    if cfg.n_heads:
+        kvh = cfg.padded_kv_heads(TP) / TP
+        for i in range(cfg.num_layers):
+            kind = cfg.pattern_at(i)
+            if kind in ("attn", "enc"):
+                kv += b_loc * s * kvh * cfg.head_dim * 2 * 2.0
+            elif kind in ("swa", "chunked") and cfg.window:
+                kv += b_loc * min(s, cfg.window) * kvh * cfg.head_dim * 2 * 2.0
+    if shape.global_batch == 1:      # long_500k: cache seq-sharded over data
+        kv /= 16.0
+    return w + kv
+
+
+def model_flops_per_device(cfg, shape) -> float:
+    n_act = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len / DEVICES
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len / DEVICES
+        return 2.0 * n_act * tokens
+    tokens = shape.global_batch / DEVICES
+    return 2.0 * n_act * tokens
+
+
+HINTS = {
+    "compute": "raise MXU occupancy: drop head padding (2-D head x head_dim "
+               "sharding), causal block-skip via the Pallas kernel",
+    "memory": "cut HBM traffic: larger fused blocks, keep flash state in "
+              "VMEM, shrink optimizer precision, more TP on weights",
+    "collective": "overlap RS/AG with compute, reduce in bf16, move DP "
+                  "gradient reduction onto the idle ICI phase, EP-style "
+                  "expert sharding to kill weight gathers",
+}
+
+
+def run(write_json: bool = True):
+    out = []
+    for arch in ARCHS:
+        if arch == "gpt-moe-1.1t":
+            continue
+        cfg = get_arch(arch)
+        for shape in SHAPES.values():
+            f = DRYRUN / f"{arch}--{shape.name}.json"
+            if not f.exists():
+                continue
+            rec = json.loads(f.read_text())
+            if rec.get("status") != "ok" or "loop_aware" not in rec:
+                continue
+            la = rec["loop_aware"]
+            compute_s = la["dot_flops"] / PEAK_FLOPS
+            mem_s = min_traffic_bytes(cfg, shape) / HBM_BW
+            wire = la.get("collective_wire_bytes_bf16",
+                          la["collective_wire_bytes"])
+            coll_s = wire / LINK_BW
+            xla_mem_s = la["traffic_bytes"] / HBM_BW
+            mf = model_flops_per_device(cfg, shape)
+            terms = {"compute": compute_s, "memory": mem_s,
+                     "collective": coll_s}
+            dominant = max(terms, key=terms.get)
+            bound = max(terms.values())
+            base_coll = None
+            bf = BASELINE / f"{arch}--{shape.name}.json"
+            if bf.exists():
+                brec = json.loads(bf.read_text())
+                if brec.get("status") == "ok" and "loop_aware" in brec:
+                    base_coll = brec["loop_aware"][
+                        "collective_wire_bytes"] / LINK_BW
+            cell = {
+                "arch": arch, "shape": shape.name,
+                "baseline_collective_s": base_coll,
+                "compute_s": compute_s, "memory_s": mem_s,
+                "collective_s": coll_s, "xla_memory_s": xla_mem_s,
+                "dominant": dominant,
+                "model_flops": mf,
+                "hlo_flops": la["dot_flops"],
+                "useful_ratio": mf / max(la["dot_flops"], 1.0),
+                "roofline_frac": (mf / PEAK_FLOPS) / max(bound, 1e-12),
+                "hint": HINTS[dominant],
+            }
+            out.append(cell)
+            row(f"roofline/{arch}/{shape.name}", 0.0, {
+                "compute_ms": round(compute_s * 1e3, 2),
+                "memory_ms": round(mem_s * 1e3, 2),
+                "collective_ms": round(coll_s * 1e3, 2),
+                "dominant": dominant,
+                "useful": round(cell["useful_ratio"], 3),
+                "roofline_frac": round(cell["roofline_frac"], 3),
+                **({"baseline_coll_ms": round(base_coll * 1e3, 2)}
+                   if base_coll else {}),
+            })
+    if write_json:
+        (ROOT / "results" / "roofline.json").write_text(
+            json.dumps(out, indent=1))
+    return out
+
+
+if __name__ == "__main__":
+    run()

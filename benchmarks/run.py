@@ -1,0 +1,36 @@
+"""Benchmark driver: one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [section ...]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+SECTIONS = ("waste_ratio", "max_job", "fault_waiting", "mfu_tables",
+            "orchestration", "cost", "collectives_bench", "kernels_bench",
+            "roofline")
+
+
+def main() -> None:
+    want = sys.argv[1:] or list(SECTIONS)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in want:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            print(f"# --- {name} ---")
+            mod.run()
+        except Exception as e:  # noqa: BLE001 - report and continue
+            failed.append(name)
+            print(f"# {name} FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

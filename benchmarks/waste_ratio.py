@@ -1,0 +1,45 @@
+"""Paper Figs 13/14 + Table 7: GPU waste ratio across HBD architectures.
+
+Reproduces: InfiniteHBD near-zero (paper 0.53% @ TP-32), NVL-72 ~10.04%,
+TPUv4 ~7.56% on the production-like trace, plus the Fig-14 fault-ratio
+sweep and the Appendix-C theoretical upper bound (Table 7).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.fault_sim import (theoretical_waste_bound, waste_over_trace,
+                                  waste_vs_fault_ratio)
+from repro.core.hbd_models import default_suite
+from repro.core.trace import generate_trace, to_4gpu_trace
+
+from .common import row, timed
+
+
+def run():
+    tr4 = to_4gpu_trace(generate_trace(400, seed=1))
+    paper = {"infinitehbd-k3": 0.0053, "nvl-72": 0.1004, "tpuv4": 0.0756}
+    for tp in (16, 32, 64):
+        for model in default_suite(720, 4):
+            st, us = timed(waste_over_trace, model, tr4, tp, 150)
+            ref = paper.get(model.name) if tp == 32 else None
+            row(f"waste_trace/tp{tp}/{model.name}", us,
+                {"mean": round(st.mean_waste, 4),
+                 "p99": round(st.p99_waste, 4),
+                 **({"paper": ref} if ref else {})})
+    # Fig 14: waste vs node fault ratio at TP-32
+    ratios = [0.01, 0.03, 0.05, 0.08, 0.12]
+    for model in default_suite(720, 4):
+        vals, us = timed(waste_vs_fault_ratio, model, 32, ratios, 10)
+        row(f"waste_vs_fault/tp32/{model.name}", us,
+            {f"{r:.2f}": round(v, 4) for r, v in zip(ratios, vals)})
+    # Table 7 bound
+    for r_gpus, ps in ((4, 0.0367), (8, 0.0722)):
+        for k in (2, 3, 4):
+            b, us = timed(theoretical_waste_bound, 32, r_gpus, k, ps)
+            row(f"table7_bound/R{r_gpus}/K{k}", us, b)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""End-to-end fault-tolerant training driver.
+
+Trains a reduced model for a few hundred steps while node faults are
+injected from a production-statistics trace; the elastic runtime
+checkpoints, re-orchestrates the OCS rings around the faults (K-hop
+bypass), restores, and finishes the run.
+
+    PYTHONPATH=src python examples/train_with_faults.py [--steps 120]
+"""
+
+import argparse
+import tempfile
+
+import jax
+
+from repro.configs import get_arch
+from repro.train.data import data_iter
+from repro.train.elastic import ElasticConfig, ElasticRunner
+from repro.train.loop import TrainConfig, init_train_state, make_train_step
+from repro.train.optimizer import OptConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--arch", default="starcoder2")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    tcfg = TrainConfig(opt=OptConfig(lr=2e-3, warmup_steps=10))
+
+    def build_step(mesh, plan, dp):
+        state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, tcfg))
+        data = data_iter(cfg, batch=8, seq=64)
+        return state, step, data
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        ecfg = ElasticConfig(num_nodes=128, gpus_per_node=4, tp_size=16,
+                             dp_size=28, checkpoint_every=20)
+        runner = ElasticRunner(ecfg, ckpt_dir, build_step)
+        faults = {args.steps // 3: {9, 10}, 2 * args.steps // 3: {55}}
+        state, losses = runner.run(args.steps, fault_schedule=faults)
+
+    print(f"\nloss: {losses[0]:.3f} -> {sum(losses[-5:]) / 5:.3f} over "
+          f"{len(losses)} steps")
+    for kind, step, settle in runner.events:
+        print(f"  {kind} at step {step}: rings re-formed in "
+              f"{settle * 1e3:.2f} ms (incl. protocol layer)")
+    med = sorted(runner.step_times.values())[len(runner.step_times) // 2]
+    stragglers = runner.cm.flag_stragglers(
+        {k: v for k, v in runner.step_times.items()})
+    print(f"  median step {med * 1e3:.1f} ms; straggler steps flagged: "
+          f"{len(stragglers)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""InfiniteHBD reproduction: transceiver-centric HBD for LLM training,
+built as a production JAX framework (SIGCOMM '25)."""

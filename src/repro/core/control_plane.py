@@ -1,0 +1,143 @@
+"""Control plane: node fabric manager + cluster manager (paper §5.2).
+
+The device level (``NodeFabricManager``) owns the OCSTrx modules of one node
+and executes topology switches; the system level (``ClusterManager``) watches
+heartbeats, reacts to fault events by re-running the orchestrator, and hands
+the training runtime a new ``MeshPlan`` plus the reconfiguration deadline
+(when all transceivers have settled).
+
+This is an event-driven simulation of the production control plane; the
+training runtime (``repro.train.elastic``) consumes its decisions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from .ocstrx import reconfig_latency_us
+from .placement import InsufficientCapacityError, MeshPlan, plan_mesh
+from .topology import KHopRingTopology, TopologyConfig
+
+# Software-stack delay on top of hardware switching (network-protocol layer
+# reconnection; excluded from the paper's 60-80us hardware figure).
+PROTOCOL_DELAY_US = 500.0
+HEARTBEAT_INTERVAL_S = 5.0
+HEARTBEAT_MISS_LIMIT = 3
+
+
+@dataclasses.dataclass
+class NodeFabricManager:
+    """Per-node agent: configures local OCSTrx, reports health."""
+
+    node_id: int
+    topo: KHopRingTopology
+    last_heartbeat_s: float = 0.0
+
+    def heartbeat(self, now_s: float) -> None:
+        self.last_heartbeat_s = now_s
+
+    def alive(self, now_s: float) -> bool:
+        if self.node_id in self.topo.faulty:
+            return False
+        return (now_s - self.last_heartbeat_s
+                < HEARTBEAT_INTERVAL_S * HEARTBEAT_MISS_LIMIT)
+
+    def apply_segment(self, segment, now_us: float = 0.0, rng=None) -> float:
+        """Drive this node's transceivers for a ring segment it belongs to."""
+        return self.topo.activate_segment(segment, now_us, rng)
+
+
+@dataclasses.dataclass
+class ReconfigEvent:
+    time_s: float
+    kind: str                  # "fault" | "repair" | "replan"
+    nodes: Tuple[int, ...]
+    plan: Optional[MeshPlan] = None
+    settle_s: float = 0.0      # when the new topology is live
+
+
+class ClusterManager:
+    """Global controller: faults in -> new MeshPlan out."""
+
+    def __init__(self, num_nodes: int, gpus_per_node: int = 4, k: int = 3,
+                 nodes_per_tor: int = 8, agg_domain: int = 64, seed: int = 0):
+        from .orchestrator import deployment_strategy
+        self.cfg = TopologyConfig(num_nodes, gpus_per_node, k)
+        # the topology graph lives in HBD-position space (deployment order)
+        self.topo = KHopRingTopology(self.cfg)
+        self.dep = deployment_strategy(num_nodes, nodes_per_tor)
+        self.pos_of = {node: i for i, node in enumerate(self.dep.order)}
+        self.k = k
+        self.nodes_per_tor = nodes_per_tor
+        self.agg_domain = agg_domain
+        self.fabric = {u: NodeFabricManager(u, self.topo)
+                       for u in range(num_nodes)}
+        self.rng = np.random.default_rng(seed)
+        self.log: List[ReconfigEvent] = []
+        self.current_plan: Optional[MeshPlan] = None
+        self.physical_faults: set = set()
+
+    # ------------------------------------------------------------- events
+
+    def on_fault(self, now_s: float, nodes: Set[int], tp_size: int,
+                 dp_size: int, pod_size: int = 1) -> ReconfigEvent:
+        """Node fault(s): mark them, re-orchestrate, compute settle time."""
+        self.physical_faults |= set(nodes)
+        self.topo.inject_faults(self.pos_of[u] for u in nodes)
+        return self._replan(now_s, tuple(nodes), "fault", tp_size, dp_size,
+                            pod_size)
+
+    def on_repair(self, now_s: float, nodes: Set[int], tp_size: int,
+                  dp_size: int, pod_size: int = 1) -> ReconfigEvent:
+        self.physical_faults -= set(nodes)
+        self.topo.repair(self.pos_of[u] for u in nodes)
+        return self._replan(now_s, tuple(nodes), "repair", tp_size, dp_size,
+                            pod_size)
+
+    def _replan(self, now_s: float, nodes: Tuple[int, ...], kind: str,
+                tp_size: int, dp_size: int, pod_size: int) -> ReconfigEvent:
+        plan = None
+        dp = dp_size
+        # Elastic scaling: shrink DP degree until the orchestrator can place
+        # the job on the healthy subgraph (the paper's single-job priority).
+        while dp >= 1:
+            try:
+                plan = plan_mesh(self.cfg.num_nodes, self.cfg.gpus_per_node,
+                                 tp_size, dp, pod_size,
+                                 faults=set(self.physical_faults), k=self.k,
+                                 nodes_per_tor=self.nodes_per_tor,
+                                 agg_domain=self.agg_domain)
+                break
+            except InsufficientCapacityError:
+                dp //= 2
+        if plan is None:
+            raise InsufficientCapacityError(
+                f"cluster cannot host even TP={tp_size} x DP=1 after {kind}")
+
+        # Settle time: every affected segment reconfigures in parallel; the
+        # hardware switch is 60-80us + protocol-layer delay.
+        settle_us = 0.0
+        for seg in plan.segments_pos:
+            settle_us = max(settle_us,
+                            self.topo.activate_segment(seg, 0.0, self.rng))
+        settle_s = now_s + (settle_us + PROTOCOL_DELAY_US) / 1e6
+        ev = ReconfigEvent(now_s, kind, nodes, plan, settle_s)
+        self.log.append(ev)
+        self.current_plan = plan
+        return ev
+
+    # ----------------------------------------------------------- stragglers
+
+    def flag_stragglers(self, step_times_s: Dict[int, float],
+                        threshold: float = 1.5) -> Set[int]:
+        """Nodes whose step time exceeds ``threshold`` x median are flagged;
+        the caller treats them like faults at the next ring rebuild (the
+        K-hop backup links make the swap as cheap as a bypass)."""
+        if not step_times_s:
+            return set()
+        med = float(np.median(list(step_times_s.values())))
+        return {u for u, t in step_times_s.items() if t > threshold * med}

@@ -1,0 +1,227 @@
+"""Comparative HBD architecture models (paper §6.2, Table 1).
+
+Each model answers: given a set of faulty nodes and a TP size, how many
+healthy GPUs can actually be placed into TP groups, and how many are wasted
+(fragmentation, topology disconnection, spare reservation, coarse-granularity
+scheduling)?  The GPU waste ratio is
+
+    waste_ratio = (healthy_gpus - placed_gpus) / total_gpus
+
+exactly as in §2.1 (faulty GPUs are accounted separately).
+
+Architectures:
+
+  * ``BigSwitch``      -- ideal single switch over the whole cluster.
+  * ``InfiniteHBDModel`` -- K-hop ring over the whole cluster (ours).
+  * ``NVLModel``       -- switch-centric HBD islands of ``hbd_gpus`` each;
+                          NVL-36/72 reserve 1/9 of GPUs as hot spares (the
+                          paper's "11% backup overhead"), NVL-576 does not.
+  * ``TPUv4Model``     -- 4^3 cubes behind central OCSes; scheduling is
+                          cube-granular, so a fault poisons its 64-TPU cube.
+  * ``SiPRingModel``   -- static rings of exactly TP size; one fault breaks
+                          the ring into a line, unusable for ring TP.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence, Set
+
+from .orchestrator import healthy_components
+
+
+@dataclasses.dataclass
+class WasteResult:
+    total_gpus: int
+    faulty_gpus: int
+    placed_gpus: int
+
+    @property
+    def healthy_gpus(self) -> int:
+        return self.total_gpus - self.faulty_gpus
+
+    @property
+    def wasted_gpus(self) -> int:
+        return self.healthy_gpus - self.placed_gpus
+
+    @property
+    def waste_ratio(self) -> float:
+        return self.wasted_gpus / self.total_gpus if self.total_gpus else 0.0
+
+    @property
+    def usable_groups(self) -> int:
+        return self.placed_gpus  # caller divides by tp_size
+
+
+class HBDModel:
+    """Base: a cluster of ``num_nodes`` nodes x ``gpus_per_node`` GPUs."""
+
+    name = "base"
+
+    def __init__(self, num_nodes: int, gpus_per_node: int = 4):
+        self.num_nodes = num_nodes
+        self.gpus_per_node = gpus_per_node
+        self.total_gpus = num_nodes * gpus_per_node
+
+    def evaluate(self, faults: Set[int], tp_size: int) -> WasteResult:
+        raise NotImplementedError
+
+    def _faulty_gpus(self, faults: Set[int]) -> int:
+        return len(faults) * self.gpus_per_node
+
+
+class BigSwitch(HBDModel):
+    """Theoretical upper bound: any healthy GPU can join any group."""
+
+    name = "big-switch"
+
+    def evaluate(self, faults: Set[int], tp_size: int) -> WasteResult:
+        healthy = self.total_gpus - self._faulty_gpus(faults)
+        placed = (healthy // tp_size) * tp_size
+        return WasteResult(self.total_gpus, self._faulty_gpus(faults), placed)
+
+
+class InfiniteHBDModel(HBDModel):
+    """K-hop ring across the whole datacenter (paper's design)."""
+
+    name = "infinitehbd"
+
+    def __init__(self, num_nodes: int, gpus_per_node: int = 4, k: int = 3,
+                 closed_ring: bool = True):
+        super().__init__(num_nodes, gpus_per_node)
+        self.k = k
+        self.closed_ring = closed_ring
+        self.name = f"infinitehbd-k{k}"
+
+    def evaluate(self, faults: Set[int], tp_size: int) -> WasteResult:
+        m = max(1, tp_size // self.gpus_per_node)
+        order = list(range(self.num_nodes))
+        comps = healthy_components(order, faults, self.k)
+        # on a closed ring the first and last components merge when the
+        # wrap-around fault gap is shorter than K
+        if self.closed_ring and len(comps) > 1:
+            head, tail = comps[0], comps[-1]
+            wrap_gap = (head[0] + self.num_nodes) - tail[-1] - 1
+            if wrap_gap < self.k:
+                comps[0] = tail + head
+                comps.pop()
+        placed_nodes = sum((len(c) // m) * m for c in comps)
+        return WasteResult(self.total_gpus, self._faulty_gpus(faults),
+                           placed_nodes * self.gpus_per_node)
+
+
+class NVLModel(HBDModel):
+    """Switch-centric islands (NVL-36/72/576).
+
+    ``spare_fraction``: NVL-36/72 deployments reserve 1/9 of GPUs as hot
+    spares (paper §6.2: "1/9 of GPUs are reserved for redundant backups");
+    reserved-but-unused spares count as waste.  Inside an island any healthy
+    compute GPU can join any group (full CCL), so waste beyond spares is the
+    (avail mod tp) fragmentation term.
+    """
+
+    name = "nvl"
+
+    def __init__(self, num_nodes: int, gpus_per_node: int = 4,
+                 hbd_gpus: int = 72, spare_fraction: float = 1.0 / 9.0):
+        super().__init__(num_nodes, gpus_per_node)
+        self.hbd_gpus = hbd_gpus
+        self.spare_fraction = spare_fraction
+        self.name = f"nvl-{hbd_gpus}"
+
+    def evaluate(self, faults: Set[int], tp_size: int) -> WasteResult:
+        nodes_per_hbd = self.hbd_gpus // self.gpus_per_node
+        n_hbd = self.num_nodes // nodes_per_hbd
+        spares = int(round(self.hbd_gpus * self.spare_fraction))
+        compute = self.hbd_gpus - spares
+        placed = 0
+        for h in range(n_hbd):
+            lo = h * nodes_per_hbd
+            f_gpus = sum(self.gpus_per_node for u in range(lo, lo + nodes_per_hbd)
+                         if u in faults)
+            # faults consume spares first, then compute capacity
+            avail = compute - max(0, f_gpus - spares)
+            avail = max(avail, 0)
+            placed += (avail // tp_size) * tp_size
+        return WasteResult(n_hbd * self.hbd_gpus,
+                           self._faulty_gpus({u for u in faults
+                                              if u < n_hbd * nodes_per_hbd}),
+                           placed)
+
+
+class TPUv4Model(HBDModel):
+    """Cube-granular hybrid: 64-TPU cubes behind central OCS switches.
+
+    Resource management is cube-granular (§2.2).  For TP <= 64 a cube is
+    carved into TP-sized sub-blocks and a fault poisons its whole sub-block
+    (the OCS cannot re-splice inside a cube); for TP > 64 groups are unions
+    of whole cubes and any fault withholds its entire cube.  This calibration
+    reproduces the paper's 7.56% waste at TP-32 on the production trace while
+    still "significantly degrading with larger TP sizes".
+    """
+
+    name = "tpuv4"
+
+    def __init__(self, num_nodes: int, gpus_per_node: int = 4, cube_gpus: int = 64):
+        super().__init__(num_nodes, gpus_per_node)
+        self.cube_gpus = cube_gpus
+
+    def evaluate(self, faults: Set[int], tp_size: int) -> WasteResult:
+        nodes_per_cube = self.cube_gpus // self.gpus_per_node
+        n_cubes = self.num_nodes // nodes_per_cube
+        total = n_cubes * self.cube_gpus
+        faulty = self._faulty_gpus({u for u in faults if u < n_cubes * nodes_per_cube})
+        if tp_size <= self.cube_gpus:
+            # sub-block granularity inside each cube
+            block_nodes = max(1, tp_size // self.gpus_per_node)
+            placed = 0
+            for c in range(n_cubes):
+                lo = c * nodes_per_cube
+                for b in range(lo, lo + nodes_per_cube, block_nodes):
+                    if not any(u in faults for u in range(b, b + block_nodes)):
+                        placed += tp_size
+            return WasteResult(total, faulty, placed)
+        # TP spans multiple cubes: only fully healthy cubes are schedulable
+        healthy_cubes = 0
+        for c in range(n_cubes):
+            lo = c * nodes_per_cube
+            if not any(u in faults for u in range(lo, lo + nodes_per_cube)):
+                healthy_cubes += 1
+        usable = healthy_cubes * self.cube_gpus
+        placed = (usable // tp_size) * tp_size
+        return WasteResult(total, faulty, placed)
+
+
+class SiPRingModel(HBDModel):
+    """Static fixed-size rings (SiP-Ring): ring size == TP size; any fault
+    breaks the ring into a line which cannot run ring TP of that size."""
+
+    name = "sip-ring"
+
+    def evaluate(self, faults: Set[int], tp_size: int) -> WasteResult:
+        nodes_per_ring = max(1, tp_size // self.gpus_per_node)
+        n_rings = self.num_nodes // nodes_per_ring
+        placed = 0
+        for rng_i in range(n_rings):
+            lo = rng_i * nodes_per_ring
+            if not any(u in faults for u in range(lo, lo + nodes_per_ring)):
+                placed += tp_size
+        total = n_rings * nodes_per_ring * self.gpus_per_node
+        faulty = self._faulty_gpus({u for u in faults
+                                    if u < n_rings * nodes_per_ring})
+        return WasteResult(total, faulty, placed)
+
+
+def default_suite(num_nodes: int, gpus_per_node: int = 4) -> List[HBDModel]:
+    """The §6.1 evaluation suite."""
+    return [
+        BigSwitch(num_nodes, gpus_per_node),
+        InfiniteHBDModel(num_nodes, gpus_per_node, k=2),
+        InfiniteHBDModel(num_nodes, gpus_per_node, k=3),
+        NVLModel(num_nodes, gpus_per_node, hbd_gpus=36),
+        NVLModel(num_nodes, gpus_per_node, hbd_gpus=72),
+        NVLModel(num_nodes, gpus_per_node, hbd_gpus=576, spare_fraction=0.0),
+        TPUv4Model(num_nodes, gpus_per_node),
+        SiPRingModel(num_nodes, gpus_per_node),
+    ]

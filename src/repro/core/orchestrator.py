@@ -1,0 +1,277 @@
+"""HBD-DCN orchestration (paper §4.3 + Appendix D).
+
+Implements, faithfully to the pseudocode:
+
+  * ``orchestrate_dcn_free``   -- Algorithm 2 (DFS over the healthy K-hop
+                                  subgraph, pop TP groups per component).
+  * ``deployment_strategy``    -- Algorithm 3 (p parallel sub-lines; the HBD
+                                  line visits one node per ToR so TP runs
+                                  *across* ToRs while DP/CP aligns *within*).
+  * ``placement_fat_tree``     -- Algorithm 4 (constraint tiers: sub-line
+                                  isolation, then ToR alignment).
+  * ``orchestrate_fat_tree``   -- Algorithm 5 (binary search over the number
+                                  of satisfied constraints; monotonic).
+  * ``greedy_baseline``        -- the paper's §6.4 baseline (first feasible
+                                  grouping of randomly ordered nodes).
+  * ``cross_tor_traffic``      -- volume-weighted cross-ToR share used for
+                                  the Fig. 17 reproduction.
+
+The placement scheme is an *ordered* list of TP groups: consecutive groups
+are DP/CP ring neighbors.  ``placement_fat_tree`` therefore emits groups
+domain-major / position-major / sub-line-minor, so the DP ring first visits
+the p rank-aligned groups under the same ToRs (intra-ToR traffic) before
+hopping to the next ToR block -- only ~1/p of DP hops cross a ToR even at
+full occupancy, and none do when alignment survives faults.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+Placement = List[List[int]]  # list of TP groups, each an ordered node list
+
+
+# --------------------------------------------------------------------------
+# Algorithm 2: DCN-free orchestration
+# --------------------------------------------------------------------------
+
+def healthy_components(order: Sequence[int], faults: Set[int], k: int) -> List[List[int]]:
+    """Connected components of the healthy K-hop subgraph along ``order``.
+
+    ``order`` is the node sequence as seen by the HBD (adjacent elements are
+    HBD neighbors).  A gap of g consecutive faulty nodes splits the line iff
+    g >= k (backup links reach at most k hops past the primary neighbor).
+    """
+    comps: List[List[int]] = []
+    cur: List[int] = []
+    gap = 0
+    for u in order:
+        if u in faults:
+            gap += 1
+            if gap >= k and cur:
+                comps.append(cur)
+                cur = []
+            continue
+        cur.append(u)
+        gap = 0
+    if cur:
+        comps.append(cur)
+    return comps
+
+
+def orchestrate_dcn_free(order: Sequence[int], faults: Set[int], m: int,
+                         k: int = 3) -> Placement:
+    """Algorithm 2: maximize GPU utilization ignoring DCN topology."""
+    if m < 1:
+        raise ValueError("TP group must span at least one node")
+    placement: Placement = []
+    for comp in healthy_components(order, faults, k):
+        while len(comp) >= m:
+            placement.append(comp[:m])
+            comp = comp[m:]
+    return placement
+
+
+# --------------------------------------------------------------------------
+# Algorithm 3: deployment strategy
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Deployment:
+    """Physical deployment: node id <-> HBD order <-> ToR."""
+
+    order: Tuple[int, ...]        # S_deploy: HBD-adjacent node sequence
+    sublines: Tuple[Tuple[int, ...], ...]
+    nodes_per_tor: int            # p
+    num_nodes: int
+
+    def tor(self, node: int) -> int:
+        return node // self.nodes_per_tor
+
+
+def deployment_strategy(num_nodes: int, nodes_per_tor: int) -> Deployment:
+    """Algorithm 3: sub-line i = nodes [i, i+p, i+2p, ...].
+
+    Consecutive HBD neighbors within a sub-line sit at the *same index under
+    consecutive ToRs*, so a TP group spans m ToRs while rank-aligned TP
+    groups in the other p-1 sub-lines share those ToRs -- keeping DP/CP
+    traffic intra-ToR.
+    """
+    p = nodes_per_tor
+    l = num_nodes // p
+    sublines = tuple(tuple(i + j * p for j in range(l)) for i in range(p))
+    order = tuple(x for sub in sublines for x in sub)
+    return Deployment(order=order, sublines=sublines,
+                      nodes_per_tor=p, num_nodes=num_nodes)
+
+
+# --------------------------------------------------------------------------
+# Algorithm 4: placement under Fat-Tree constraints
+# --------------------------------------------------------------------------
+
+def placement_fat_tree(dep: Deployment, n_constraints: int, faults: Set[int],
+                       m: int, agg_domain: int, k: int = 3) -> Placement:
+    """Algorithm 4.
+
+    Constraints are consumed in two tiers (Algorithm 4's ``n_subline`` /
+    ``n_align`` split):
+
+      tier A (first ``min(n_constraints, p)``): *sub-line isolation* -- that
+        many sub-lines are placed independently and split at
+        Aggregation-Switch domain borders, so no TP group spans two domains.
+      tier B (remaining constraints): *TP-group alignment* -- within that
+        many aggregation domains, a fault anywhere under a ToR poisons the
+        whole ToR (all p co-located nodes), so every sub-line shifts
+        identically and rank alignment survives.
+
+    Whatever capacity the constraints exclude is recovered by an
+    unconstrained Algorithm-2 pass over the residual nodes.
+    """
+    p = dep.nodes_per_tor
+    n_maxsubline = len(dep.sublines)
+    n_domain = dep.num_nodes // agg_domain if agg_domain else 0
+    n_align = max(0, min(n_constraints - n_maxsubline, n_domain))
+    n_subline = min(n_maxsubline, n_constraints)
+
+    # Tier B: expand faults to whole ToRs inside the aligned domains.
+    eff_faults = set(faults)
+    for dom in range(n_align):
+        lo, hi = dom * agg_domain, (dom + 1) * agg_domain
+        for node in range(lo, min(hi, dep.num_nodes)):
+            if node in faults:
+                tor = node // p
+                eff_faults.update(range(tor * p, min((tor + 1) * p, dep.num_nodes)))
+
+    # (domain, position-in-domain, subline) -> group; ordering key later.
+    keyed: List[Tuple[Tuple[int, int, int], List[int]]] = []
+    used: Set[int] = set()
+
+    for idx in range(n_subline):
+        sub = dep.sublines[idx]
+        # split the sub-line wherever the aggregation domain changes
+        chunks: Dict[int, List[int]] = {}
+        for u in sub:
+            dom = (u // agg_domain) if agg_domain else 0
+            chunks.setdefault(dom, []).append(u)
+        for dom, chunk in chunks.items():
+            for pos, grp in enumerate(orchestrate_dcn_free(chunk, eff_faults, m, k)):
+                keyed.append(((dom, pos, idx), grp))
+                used.update(grp)
+
+    # DP ring order: domain-major, then cluster by the groups' actual ToR
+    # signature (beyond-paper: fault-shifted sub-lines re-align with other
+    # equally-shifted groups instead of breaking every neighboring pair),
+    # position-major, sub-line-minor as the tie-break.
+    def order_key(kv):
+        (dom, pos, idx), grp = kv
+        sig = tuple(u // p for u in grp)
+        return (dom, sig, pos, idx)
+
+    keyed.sort(key=order_key)
+    placement: Placement = [grp for _, grp in keyed]
+
+    # Residual: unconstrained placement over everything not yet used.  Used
+    # nodes act as faults so groups never jump a >K gap of consumed nodes.
+    res_faults = set(faults) | used
+    for grp in orchestrate_dcn_free(dep.order, res_faults, m, k):
+        placement.append(grp)
+    return placement
+
+
+# --------------------------------------------------------------------------
+# Algorithm 5: binary search orchestration
+# --------------------------------------------------------------------------
+
+def orchestrate_fat_tree(num_nodes: int, gpus_per_node: int, nodes_per_tor: int,
+                         faults: Set[int], tp_size: int, job_gpus: int,
+                         agg_domain: int, k: int = 3) -> Optional[Placement]:
+    """Algorithm 5: max constraints whose placement still satisfies the job."""
+    if tp_size % gpus_per_node:
+        raise ValueError("tp_size must be a multiple of gpus_per_node")
+    m = tp_size // gpus_per_node
+    dep = deployment_strategy(num_nodes, nodes_per_tor)
+    n_domain = num_nodes // agg_domain if agg_domain else 0
+    lo, hi = 0, n_domain + len(dep.sublines)
+    best: Optional[Placement] = None
+    while lo <= hi:
+        mid = (lo + hi) // 2
+        scheme = placement_fat_tree(dep, mid, faults, m, agg_domain, k)
+        if len(scheme) * m * gpus_per_node >= job_gpus:
+            best = scheme
+            lo = mid + 1
+        else:
+            hi = mid - 1
+    if best is None:
+        return None
+    need = math.ceil(job_gpus / (m * gpus_per_node))
+    return best[:need]
+
+
+# --------------------------------------------------------------------------
+# Baseline (paper §6.4): greedy random placement
+# --------------------------------------------------------------------------
+
+def greedy_baseline(num_nodes: int, gpus_per_node: int, faults: Set[int],
+                    tp_size: int, job_gpus: int, k: int = 3,
+                    seed: int = 0,
+                    order: Optional[Sequence[int]] = None) -> Optional[Placement]:
+    """Randomly order the cluster, take the first feasible grouping.
+
+    TP groups must still be K-hop rings (physically realizable), so groups
+    are carved from healthy runs of the *HBD wiring* order, but the
+    assignment of groups to job ranks is random -- which is what spills DP
+    across ToRs.
+    """
+    m = tp_size // gpus_per_node
+    groups = orchestrate_dcn_free(order if order is not None
+                                  else list(range(num_nodes)), faults, m, k)
+    need = math.ceil(job_gpus / (m * gpus_per_node))
+    if len(groups) < need:
+        return None
+    rng = random.Random(seed)
+    rng.shuffle(groups)
+    return groups[:need]
+
+
+# --------------------------------------------------------------------------
+# Cross-ToR traffic accounting (Fig. 17)
+# --------------------------------------------------------------------------
+
+def cross_tor_traffic(placement: Placement, nodes_per_tor: int,
+                      dp_bytes: float = 1.0,
+                      tp_bytes: float = 9.0) -> Dict[str, float]:
+    """Volume-weighted cross-ToR share.
+
+    TP traffic always stays in the HBD (never touches the DCN).  DP/CP/PP
+    traffic rides the DCN between rank-aligned nodes of consecutive TP groups
+    in the DP ring; each such node pair exchanges ``dp_bytes`` while each TP
+    group internally moves ``tp_bytes`` per member.  The defaults (9:1) match
+    the Megatron-style volume ratio that puts the paper's baseline plateau
+    near 10%; benchmarks recompute both from the actual model config.
+    """
+    if not placement:
+        return {"cross_tor_share": 0.0, "dp_cross_share": 0.0,
+                "dp_pairs": 0, "crossing_pairs": 0}
+    m = len(placement[0])
+    tor = lambda u: u // nodes_per_tor
+    crossing = 0
+    pairs = 0
+    ring = placement + [placement[0]] if len(placement) > 2 else placement
+    for g1, g2 in zip(ring, ring[1:]):
+        for rank in range(m):
+            pairs += 1
+            if tor(g1[rank]) != tor(g2[rank]):
+                crossing += 1
+    dp_vol = pairs * dp_bytes
+    cross_vol = crossing * dp_bytes
+    tp_vol = len(placement) * m * tp_bytes
+    total = dp_vol + tp_vol
+    return {
+        "cross_tor_share": cross_vol / total if total else 0.0,
+        "dp_cross_share": crossing / pairs if pairs else 0.0,
+        "dp_pairs": pairs,
+        "crossing_pairs": crossing,
+    }

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU):
+
+  * flash_attention -- blockwise online-softmax attention (train/prefill)
+  * decode_attention -- flash-decode against long KV caches
+  * ssd_scan -- Mamba-2 chunked state-space-dual scan
+Each package ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit
+wrapper) and ref.py (pure-jnp oracle).
+"""

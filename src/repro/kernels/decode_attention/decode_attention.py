@@ -1,0 +1,104 @@
+"""Pallas TPU flash-decode kernel.
+
+decode_32k / long_500k are memory-bound: one query row scans a huge KV
+cache.  The grid walks (batch, kv_head, kv_block); each step streams one
+(Bk, D) K tile and V tile HBM->VMEM (this is the roofline-critical HBM
+traffic), computes the (rep, Bk) logits for the ``rep`` query heads sharing
+that KV head on the MXU, and folds them into the online-softmax scratch.
+Scratch is (rep, D) -- tiny -- so arbitrarily long caches stream at HBM
+bandwidth.  Length masking via iota lets block tails past ``length`` skip.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, scale: float, block_k: int, n_kv: int,
+                   rep: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    live = ki * block_k < length
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (rep, D)
+        k = k_ref[0, 0].astype(jnp.float32)               # (Bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (rep, Bk)
+        pos = ki * block_k + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k_cache, v_cache, lengths, *, block_k=512,
+                            interpret=None):
+    """q: (B, Hq, D); caches: (B, S, Hkv, D); lengths: (B,) -> (B, Hq, D)."""
+    b, hq, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    rep = hq // hkv
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    block_k = min(block_k, s)
+    n_kv = -(-s // block_k)
+    pad = n_kv * block_k - s
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    # layouts: q (B, Hkv, rep, D); caches (B, Hkv, S, D)
+    qg = q.reshape(b, hkv, rep, d)
+    kt = jnp.swapaxes(k_cache, 1, 2)
+    vt = jnp.swapaxes(v_cache, 1, 2)
+
+    kernel = functools.partial(_decode_kernel, scale=1.0 / math.sqrt(d),
+                               block_k=block_k, n_kv=n_kv, rep=rep)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, n_kv),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, h, j: (b_,)),
+            pl.BlockSpec((1, 1, rep, d), lambda b_, h, j: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, j: (b_, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, j: (b_, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, d), lambda b_, h, j: (b_, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, kt, vt)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,20 @@
+"""Jitted public entry point for flash-decode attention."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .decode_attention import decode_attention_pallas
+from .ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "impl"))
+def decode_attention(q, k_cache, v_cache, lengths, *, block_k=512,
+                     impl="auto"):
+    if impl == "ref":
+        return decode_attention_ref(q, k_cache, v_cache, lengths)
+    interpret = jax.default_backend() != "tpu"
+    return decode_attention_pallas(q, k_cache, v_cache, lengths,
+                                   block_k=block_k, interpret=interpret)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the decode-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """q: (B, Hq, D); caches: (B, S, Hkv, D); lengths: (B,) valid entries."""
+    b, hq, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    rep = hq // hkv
+    k = jnp.repeat(k_cache, rep, axis=2) if rep > 1 else k_cache
+    v = jnp.repeat(v_cache, rep, axis=2) if rep > 1 else v_cache
+    logits = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(d)
+    valid = jnp.arange(s)[None, :] < lengths[:, None]
+    logits = jnp.where(valid[:, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

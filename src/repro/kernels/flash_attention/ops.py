@@ -1,0 +1,33 @@
+"""Jitted public entry point for flash attention.
+
+``impl="auto"`` picks the Pallas kernel on TPU and the interpret-mode kernel
+elsewhere; ``impl="xla"`` uses the scan-based XLA fallback that the model
+stack ships for dry-runs (repro.models.layers.flash_attention_xla).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .flash_attention import flash_attention_pallas
+from .ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "chunk", "prefix_len", "block_q", "block_k", "impl"))
+def flash_attention(q, k, v, *, causal=True, window=0, chunk=0, prefix_len=0,
+                    block_q=128, block_k=128, impl="auto"):
+    if impl == "ref":
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             chunk=chunk, prefix_len=prefix_len)
+    if impl == "xla":
+        from repro.models.layers import flash_attention_xla
+        return flash_attention_xla(q, k, v, causal=causal, window=window,
+                                   chunk=chunk, prefix_len=prefix_len)
+    interpret = jax.default_backend() != "tpu"
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, chunk=chunk,
+        prefix_len=prefix_len, block_q=block_q, block_k=block_k,
+        interpret=interpret)

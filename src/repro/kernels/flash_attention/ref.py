@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, chunk=0, prefix_len=0):
+    """Naive full-materialization attention.
+
+    q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D); GQA by head replication.
+    """
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    rep = hq // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(d).astype(jnp.float32)
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        cm = qp >= kp
+        if prefix_len:
+            cm = cm | (kp < prefix_len)
+        mask &= cm
+    if window:
+        mask &= (qp - kp) < window
+    if chunk:
+        mask &= (qp // chunk) == (kp // chunk)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

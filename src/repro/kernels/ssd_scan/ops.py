@@ -1,0 +1,24 @@
+"""Jitted public entry point for the SSD scan kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import ssd_scan_ref
+from .ssd_scan import ssd_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd_scan(x, dt, A, B, C, D=None, *, chunk=128, impl="auto"):
+    if impl == "ref":
+        y, _ = ssd_scan_ref(x, dt, A, B, C, D)
+        return y
+    interpret = jax.default_backend() != "tpu"
+    y = ssd_scan_pallas(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+    if D is not None:
+        y = y + (D[None, None, :, None] * x.astype(jnp.float32)).astype(y.dtype)
+    return y
+

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the SSD scan kernel: the literal sequential
+recurrence h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ; y_t = C_t h_t + D x_t."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_scan_ref(x, dt, A, B, C, D=None, init_state=None):
+    """x: (Bt, S, H, P); dt: (Bt, S, H); A: (H,); B/C: (Bt, S, N).
+    Returns (y (Bt,S,H,P), final_state (Bt,H,N,P))."""
+    bt, s, h, p = x.shape
+    n = B.shape[-1]
+    st0 = (init_state if init_state is not None
+           else jnp.zeros((bt, h, n, p), jnp.float32))
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp            # (Bt,H,P), (Bt,H), (Bt,N), (Bt,N)
+        dec = jnp.exp(dt_t * A)              # (Bt,H)
+        add = jnp.einsum("bn,bh,bhp->bhnp", b_t, dt_t, x_t)
+        state = state * dec[:, :, None, None] + add
+        y_t = jnp.einsum("bn,bhnp->bhp", c_t, state)
+        return state, y_t
+
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(B.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(C.astype(jnp.float32), 1, 0))
+    final, ys = lax.scan(step, st0, xs)
+    y = jnp.moveaxis(ys, 0, 1)
+    if D is not None:
+        y = y + D[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), final.astype(x.dtype)

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel for the chunked SSD scan (Mamba-2 inner loop).
+
+The grid walks (batch, head, chunk) with chunks innermost/sequential; the
+running state (N, P) lives in VMEM scratch across chunk steps.  Per chunk the
+kernel does three MXU matmuls on (Q, ...) tiles:
+
+    scores  = C B^T                       (Q, Q)
+    y_intra = (scores . L) (dt*x)         (Q, P)   L = segment decays
+    y_inter = (C * in_decay) state        (Q, P)
+    state   = decay_end-weighted B^T (dt*x) + chunk_decay * state
+
+Q = 128 aligns the MXU; VMEM working set is a few (Q, max(N, P)) tiles plus
+the (N, P) state -- far under budget.  The decay matrices come from a
+cumulative sum along the chunk (VPU work), never materialized at (S, S).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *,
+                chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (Q,)
+    a = a_ref[0]                                  # scalar decay rate (<0)
+    b = b_ref[0].astype(jnp.float32)              # (Q, N)
+    c = c_ref[0].astype(jnp.float32)              # (Q, N)
+
+    da = dt * a                                   # (Q,) negative increments
+    cs = jnp.cumsum(da)                           # within-chunk cumsum
+    total = cs[-1]
+    xbar = x * dt[:, None]                        # (Q, P)
+
+    # intra-chunk: y_i = sum_{j<=i} (C_i.B_j) exp(cs_i - cs_j) xbar_j
+    scores = lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q,Q)
+    seg = cs[:, None] - cs[None, :]
+    causal = lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    l_mat = jnp.exp(jnp.where(causal, seg, -1e30))   # mask exponent, not product
+    y = lax.dot_general(scores * l_mat, xbar, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32)
+
+    # inter-chunk: y_i += (C_i exp(cs_i)) . state_prev
+    state = state_scr[...]                        # (N, P)
+    y = y + lax.dot_general(c * jnp.exp(cs)[:, None], state,
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # state update: state = exp(total) state + sum_j exp(total - cs_j) B_j xbar_j
+    w_b = b * jnp.exp(total - cs)[:, None]        # (Q, N)
+    state_scr[...] = state * jnp.exp(total) + lax.dot_general(
+        w_b, xbar, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_pallas(x, dt, A, B, C, *, chunk=128, interpret=None):
+    """x: (Bt, S, H, P); dt: (Bt, S, H); A: (H,); B/C: (Bt, S, N).
+    Returns y (Bt, S, H, P) (without the D skip term)."""
+    bt, s, h, p = x.shape
+    n = B.shape[-1]
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    chunk = min(chunk, s)
+    assert s % chunk == 0, "seq must be a multiple of the chunk size"
+    nc = s // chunk
+
+    # layouts: x (Bt, H, S, P); dt (Bt, H, S); B/C (Bt, S, N)
+    xt = jnp.swapaxes(x, 1, 2)
+    dtt = jnp.swapaxes(dt, 1, 2)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bt, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b_, h_, c_: (b_, h_, c_)),
+            pl.BlockSpec((1,), lambda b_, h_, c_: (h_,)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, c_: (b_, c_, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, c_: (b_, c_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p),
+                               lambda b_, h_, c_: (b_, h_, c_, 0)),
+        out_shape=jax.ShapeDtypeStruct((bt, h, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, A.astype(jnp.float32), B, C)
+    return jnp.swapaxes(out, 1, 2)

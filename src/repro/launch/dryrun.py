@@ -1,0 +1,314 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we build allocation-free ShapeDtypeStruct inputs, jit the real
+train/prefill/decode step with production in/out shardings, ``.lower()``,
+``.compile()``, then record:
+
+  * ``compiled.memory_analysis()``  -- proves the cell fits per-device HBM,
+  * ``compiled.cost_analysis()``    -- HLO FLOPs / bytes for the roofline,
+  * collective bytes parsed from the optimized HLO (all-gather, all-reduce,
+    reduce-scatter, all-to-all, collective-permute),
+
+into results/dryrun/<mesh>/<arch>--<shape>.json (cached; delete to rerun).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--mesh single|multi|both] [--force] [--list]
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^\n]*?\s*=\s*(\([^)]*\)|[a-z0-9_\[\],{} ]+?)\(", re.I)
+
+SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|f64|s64|c64)"
+                      r"\[([0-9,]*)\]")
+
+DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "f64": 8, "s64": 8, "c64": 8}
+
+
+def parse_collective_bytes(hlo_text: str):
+    """Sum output-shape bytes of every collective op in the optimized HLO.
+
+    HLO lines look like:  %ag = bf16[16,512,4096] all-gather(...)
+    We count the result size per op kind (a good proxy for wire bytes on the
+    receiving side; ring algorithms move ~2x for all-reduce, accounted in
+    the roofline model).
+    """
+    out = {}
+    for line in hlo_text.splitlines():
+        m = re.search(r"= ([a-z0-9\[\],{}() ]*?)(all-gather-start|all-gather|"
+                      r"all-reduce-start|all-reduce|reduce-scatter|"
+                      r"all-to-all|collective-permute-start|"
+                      r"collective-permute)\(", line)
+        if not m:
+            continue
+        kind = m.group(2).replace("-start", "")
+        nbytes = 0
+        for dt, dims in SHAPE_RE.findall(m.group(1)):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * DTYPE_BYTES.get(dt, 4)
+        if nbytes:
+            out.setdefault(kind, {"count": 0, "bytes": 0})
+            out[kind]["count"] += 1
+            out[kind]["bytes"] += nbytes
+    return out
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               variant: str = "baseline"):
+    """Construct (step_fn, example_args_specs, in_shardings) for a cell.
+
+    Variants (hillclimb experiments; see EXPERIMENTS.md section Perf):
+      baseline  -- current defaults (grouped-GQA, SP, flash-VJP)
+      moe-ep    -- MoE layers use expert-parallel resident weights +
+                   binary-exchange all-to-all instead of TP-sharded experts
+      kvdedup   -- decode only: KV heads kept at their true count
+                   (replicated) and the KV cache sharded over the model
+                   axis on the sequence dim (kills GQA padding waste)
+      ring      -- MoE all-reduce via explicit ppermute neighbor ring
+                   (paper-faithful HBD traffic; collective-permute ops)
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import get_arch, SHAPES, input_specs
+    from repro.configs.base import ModelConfig
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import transformer as T
+    from repro.parallel.sharding import mesh_axes, parallel_rules, resolve
+    from repro.parallel.specs import (cache_pspecs, opt_pspecs, param_pspecs,
+                                      shardings_for)
+    from repro.train.loop import TrainConfig, loss_fn, make_train_step
+    from repro.train.optimizer import OptConfig
+
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = mesh_axes(multi_pod=multi_pod)
+    tp = mesh.shape["model"]
+
+    # batch too small for the data axes (long_500k has batch=1): replicate
+    # the batch and shard the KV cache sequence dim over "data" instead
+    # (context-parallel decode; GSPMD partitions the softmax reductions).
+    batch_ax = rules.get("batch")
+    names = batch_ax if isinstance(batch_ax, tuple) else (batch_ax,)
+    bdiv = 1
+    for nm in names:
+        if nm:
+            bdiv *= mesh.shape[nm]
+    seq_sharded = False
+    if shape.global_batch % bdiv:
+        rules = dict(rules)
+        rules["batch"] = None
+        seq_sharded = True
+
+    opt_name = "adamw_lowmem" if cfg.param_count() > 1.0e11 else "adamw"
+    moe_impl = "ep" if variant == "moe-ep" else "tp"
+    ar_impl = "ring" if variant == "ring" else "psum"
+    train_cfg = TrainConfig(opt=OptConfig(name=opt_name), moe_impl=moe_impl,
+                            ar_impl=ar_impl)
+    kv_pad = True
+    if variant == "kvdedup":
+        kv_pad = False
+        rules = dict(rules)
+        rules["kv_heads"] = None
+        rules["seq_shard"] = "model"
+        seq_sharded = True
+
+    with parallel_rules(rules, mesh):
+        # abstract params (no allocation)
+        params = jax.eval_shape(
+            lambda: T.init_params(cfg, jax.random.PRNGKey(0), tp=tp,
+                                  kv_pad=kv_pad))
+        pspecs = param_pspecs(params, moe_impl=moe_impl)
+        batch_axes = rules["batch"]
+        specs = input_specs(cfg, shape)
+
+        if shape.kind == "train":
+            from repro.train.optimizer import init_opt_state
+            opt_shape = jax.eval_shape(
+                lambda p: init_opt_state(p, train_cfg.opt), params)
+            ospecs = opt_pspecs(pspecs, params, opt_name)
+            state = {"params": params, "opt": opt_shape}
+            sspecs = {"params": pspecs, "opt": ospecs}
+            bspecs = {k: P(*((batch_axes,) + (None,) * (len(v.shape) - 1)))
+                      for k, v in specs.items()}
+            step = make_train_step(cfg, train_cfg)
+            in_sh = (shardings_for(mesh, sspecs), shardings_for(mesh, bspecs))
+            args = (state, specs)
+            fn = step
+        elif shape.kind == "prefill":
+            bspecs = {k: P(*((batch_axes,) + (None,) * (len(v.shape) - 1)))
+                      for k, v in specs.items()}
+
+            def prefill(params, batch):
+                h = T.forward(params, cfg, batch, remat=False)
+                w = params.get("lm_head", params["embed"].T)
+                logits = (h[:, -1] @ w).astype(jnp.float32)
+                mask = jnp.arange(logits.shape[-1]) < cfg.vocab_size
+                return jnp.argmax(
+                    jnp.where(mask[None], logits, -jnp.inf), -1)
+
+            in_sh = (shardings_for(mesh, pspecs), shardings_for(mesh, bspecs))
+            args = (params, specs)
+            fn = prefill
+        else:  # decode
+            max_len = shape.seq_len
+            cache = jax.eval_shape(
+                lambda p: T.init_cache(p, cfg, shape.global_batch, max_len),
+                params)
+            cspecs = cache_pspecs(cache, seq_sharded=seq_sharded)
+            bspecs = {"tokens": P(batch_axes, None),
+                      "position": P(batch_axes)}
+
+            def serve_step(params, cache, tokens, position):
+                return T.decode_step(params, cfg, cache, tokens, position,
+                                     moe_ctx={"moe_impl": moe_impl,
+                                              "ar_impl": ar_impl})
+
+            in_sh = (shardings_for(mesh, pspecs),
+                     shardings_for(mesh, cspecs),
+                     shardings_for(mesh, bspecs["tokens"]),
+                     shardings_for(mesh, bspecs["position"]))
+            args = (params, cache, specs["tokens"], specs["position"])
+            fn = serve_step
+        return mesh, rules, fn, in_sh, args
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, force: bool = False,
+             variant: str = "baseline"):
+    import jax
+    from repro.parallel.sharding import parallel_rules
+
+    mesh_name = "multi" if multi_pod else "single"
+    out_dir = RESULTS / mesh_name if variant == "baseline" else \
+        RESULTS.parent / f"dryrun_{variant}" / mesh_name
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_file = out_dir / f"{arch}--{shape_name}.json"
+    if out_file.exists() and not force:
+        rec = json.loads(out_file.read_text())
+        if rec.get("status") == "ok":
+            print(f"[cached] {mesh_name} {arch} {shape_name}")
+            return rec
+
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "status": "error"}
+    try:
+        from repro.parallel.sharding import mesh_axes
+        mesh, rules, fn, in_sh, args = build_cell(arch, shape_name, multi_pod,
+                                                  variant)
+        with parallel_rules(rules, mesh), mesh:
+            jitted = jax.jit(fn, in_shardings=in_sh)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        coll = parse_collective_bytes(hlo)
+        from repro.launch.hlo_analysis import total_stats
+        from repro.configs import get_arch as _ga
+        _cfg = _ga(arch)
+        _cycle = len(_cfg.layer_pattern)
+        loop_aware = total_stats(hlo, default_trip=max(
+            _cfg.num_layers // max(_cycle, 1), 1))
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes":
+                    getattr(mem, "generated_code_size_in_bytes", None),
+            },
+            "cost": {"flops": cost.get("flops"),
+                     "bytes_accessed": cost.get("bytes accessed"),
+                     "transcendentals": cost.get("transcendentals")},
+            "collectives": coll,
+            "loop_aware": loop_aware,
+            "num_devices": mesh.devices.size,
+        })
+        print(f"[ok] {mesh_name} {arch} {shape_name}: "
+              f"compile={t_compile:.0f}s flops={cost.get('flops', 0):.3e} "
+              f"temp={rec['memory']['temp_bytes']}")
+    except Exception as e:  # noqa: BLE001 - record and continue the sweep
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {mesh_name} {arch} {shape_name}: {rec['error'][:200]}")
+    out_file.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def cells(arch_filter=None, shape_filter=None):
+    from repro.configs import ARCHS, applicable_shapes, get_arch
+    for name in ARCHS:
+        if name == "gpt-moe-1.1t":
+            continue  # paper-internal model: MFU-sim only, not a dry-run cell
+        if arch_filter and arch_filter not in (name,):
+            continue
+        cfg = get_arch(name)
+        for s in applicable_shapes(cfg):
+            if shape_filter and s.name != shape_filter:
+                continue
+            yield name, s.name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "moe-ep", "kvdedup", "ring"])
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import ALIASES
+    arch = ALIASES.get(args.arch, args.arch) if args.arch else None
+
+    todo = list(cells(arch, args.shape))
+    if args.list:
+        for a, s in todo:
+            print(a, s)
+        return
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    n_ok = n_fail = 0
+    for multi in meshes:
+        for a, s in todo:
+            rec = run_cell(a, s, multi, args.force, args.variant)
+            if rec["status"] == "ok":
+                n_ok += 1
+            else:
+                n_fail += 1
+    print(f"done: {n_ok} ok, {n_fail} failed")
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,223 @@
+"""Loop-aware analysis of optimized HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies **once**, which
+undercounts scan-over-layers models by ~the layer count.  This analyzer
+parses the optimized HLO module, builds the computation call graph
+(while/fusion/call), extracts per-computation
+
+  * dot FLOPs            (2 x prod(out dims) x prod(lhs contracting dims)),
+  * HBM traffic          (operand + output bytes of top-level ops --
+                          fusion boundaries approximate materialization),
+  * collective wire bytes per kind (ring-algorithm factors x group size),
+
+and totals them with while trip counts multiplied through (recovered from
+the loop condition's compare-against-constant; ``default_trip`` covers
+non-canonical loops).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s8": 1, "u8": 1,
+               "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+               "pred": 1, "c64": 8, "c128": 16}
+
+SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[\w\[\],{} ]+?))\s*"
+    r"([\w\-]+)\((.*)$")
+COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+SKIP_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+                "bitcast", "while", "conditional"}
+
+
+def _parse_shape(type_str: str) -> Tuple[int, List[List[int]]]:
+    """Total bytes + list of dim-lists for (possibly tuple) type strings."""
+    total = 0
+    shapes = []
+    for dt, dims in SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        dd = [int(d) for d in dims.split(",") if d]
+        n = 1
+        for d in dd:
+            n *= d
+        total += n * DTYPE_BYTES[dt]
+        shapes.append(dd)
+    return total, shapes
+
+
+def _group_size(attrs: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+@dataclasses.dataclass
+class CompStats:
+    dot_flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
+    children: List[str] = dataclasses.field(default_factory=list)
+    while_loops: List[Tuple[str, Optional[str]]] = dataclasses.field(
+        default_factory=list)
+    constants: List[int] = dataclasses.field(default_factory=list)
+
+
+def parse_hlo(hlo: str):
+    # ---- pass 1: ops with shapes, per computation
+    comps: Dict[str, List[Tuple]] = {}
+    order: List[str] = []
+    entry = None
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        hdr = COMP_HDR_RE.match(line)
+        if hdr and line.endswith("{"):
+            cur = hdr.group(2)
+            comps[cur] = []
+            order.append(cur)
+            if hdr.group(1):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        m = OP_RE.match(line)
+        if m:
+            comps[cur].append(m.groups())
+
+    symtab: Dict[str, Tuple[int, List[List[int]]]] = {}
+    for cname, ops in comps.items():
+        for name, type_str, opcode, rest in ops:
+            symtab[name] = _parse_shape(type_str)
+
+    # ---- pass 2: per-computation stats
+    stats: Dict[str, CompStats] = {}
+    for cname, ops in comps.items():
+        st = CompStats()
+        for name, type_str, opcode, rest in ops:
+            out_bytes, out_shapes = symtab[name]
+            cm = CONST_RE.search(rest) if opcode == "constant" else None
+            if cm and "s32[]" in type_str:
+                st.constants.append(int(cm.group(1)))
+
+            if opcode == "dot":
+                out_prod = 1
+                for dd in out_shapes:
+                    for d in dd:
+                        out_prod *= d
+                ops_named = re.findall(r"%([\w.\-]+)", rest)
+                cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rest)
+                k = 1
+                if ops_named and cdims and ops_named[0] in symtab:
+                    _, lhs_shapes = symtab[ops_named[0]]
+                    if lhs_shapes:
+                        lhs = lhs_shapes[0]
+                        for i in (int(x) for x in cdims.group(1).split(",")
+                                  if x):
+                            if i < len(lhs):
+                                k *= lhs[i]
+                st.dot_flops += 2.0 * out_prod * k
+            elif opcode == "fusion":
+                c = re.search(r"calls=%?([\w.\-]+)", rest)
+                if c:
+                    st.children.append(c.group(1))
+            elif opcode == "call":
+                c = re.search(r"to_apply=%?([\w.\-]+)", rest)
+                if c:
+                    st.children.append(c.group(1))
+            elif opcode == "while":
+                body = re.search(r"body=%?([\w.\-]+)", rest)
+                cond = re.search(r"condition=%?([\w.\-]+)", rest)
+                st.while_loops.append((body.group(1) if body else "",
+                                       cond.group(1) if cond else None))
+            elif opcode.replace("-start", "") in COLLECTIVE_KINDS:
+                kind = opcode.replace("-start", "")
+                n = _group_size(rest)
+                d = st.collectives.setdefault(
+                    kind, {"count": 0.0, "bytes": 0.0, "wire_bytes": 0.0,
+                           "wire_bytes_bf16": 0.0})
+                d["count"] += 1
+                d["bytes"] += out_bytes
+                if kind == "all-reduce":
+                    wire = 2.0 * out_bytes * (n - 1) / max(n, 1)
+                elif kind in ("all-gather", "reduce-scatter", "all-to-all"):
+                    wire = out_bytes * (n - 1) / max(n, 1)
+                else:  # collective-permute: one neighbor hop
+                    wire = out_bytes
+                d["wire_bytes"] += wire
+                # bf16-normalized: XLA-CPU promotes bf16 collectives to f32
+                # (convert hoisting); TPU moves them in bf16.  Halve f32
+                # payloads for the TPU-projected wire bytes.
+                d["wire_bytes_bf16"] += wire * (0.5 if "f32[" in type_str
+                                                else 1.0)
+
+            if opcode not in SKIP_TRAFFIC:
+                in_names = re.findall(r"%([\w.\-]+)", rest)
+                in_bytes = sum(symtab.get(o, (0, None))[0] for o in in_names)
+                st.traffic_bytes += out_bytes + in_bytes
+        stats[cname] = st
+    return stats, entry
+
+
+def _merge(dst: Dict, src: Dict, factor: float) -> None:
+    for k, v in src.items():
+        d = dst.setdefault(k, {"count": 0.0, "bytes": 0.0, "wire_bytes": 0.0,
+                               "wire_bytes_bf16": 0.0})
+        for f in ("count", "bytes", "wire_bytes", "wire_bytes_bf16"):
+            d[f] += v.get(f, 0.0) * factor
+
+
+def total_stats(hlo: str, default_trip: int = 1) -> Dict:
+    stats, entry = parse_hlo(hlo)
+    memo: Dict[str, Dict] = {}
+
+    def visit(name: str) -> Dict:
+        if name in memo:
+            return memo[name]
+        comp = stats.get(name)
+        if comp is None:
+            return {"flops": 0.0, "traffic": 0.0, "coll": {}}
+        memo[name] = {"flops": 0.0, "traffic": 0.0, "coll": {}}  # cycle guard
+        total = {"flops": comp.dot_flops, "traffic": comp.traffic_bytes,
+                 "coll": {k: dict(v) for k, v in comp.collectives.items()}}
+        for callee in comp.children:
+            sub = visit(callee)
+            total["flops"] += sub["flops"]
+            total["traffic"] += sub["traffic"]
+            _merge(total["coll"], sub["coll"], 1.0)
+        for body, cond in comp.while_loops:
+            cond_comp = stats.get(cond) if cond else None
+            trip = (max(cond_comp.constants) if cond_comp and
+                    cond_comp.constants else default_trip)
+            sub = visit(body)
+            total["flops"] += trip * sub["flops"]
+            total["traffic"] += trip * sub["traffic"]
+            _merge(total["coll"], sub["coll"], trip)
+        memo[name] = total
+        return total
+
+    t = visit(entry)
+    return {
+        "dot_flops": t["flops"],
+        "traffic_bytes": t["traffic"],
+        "collective_bytes": sum(v["bytes"] for v in t["coll"].values()),
+        "collective_wire_bytes": sum(v["wire_bytes"]
+                                     for v in t["coll"].values()),
+        "collective_wire_bytes_bf16": sum(v.get("wire_bytes_bf16", 0.0)
+                                          for v in t["coll"].values()),
+        "collectives": {k: {f: round(x, 1) for f, x in v.items()}
+                        for k, v in t["coll"].items()},
+    }

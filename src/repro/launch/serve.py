@@ -1,0 +1,53 @@
+"""Serving launcher: batched requests through the ServeEngine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral --requests 6
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--max-batch", type=int, default=4)
+    args = ap.parse_args()
+
+    from repro.configs import get_arch
+    from repro.models import init_params
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_arch(args.arch).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_batch=args.max_batch, max_len=128)
+
+    rng = np.random.default_rng(0)
+    pending = [Request(i, rng.integers(0, cfg.vocab_size, 6).tolist(),
+                       max_new=args.max_new) for i in range(args.requests)]
+    done = []
+    t0 = time.perf_counter()
+    steps = 0
+    while pending or any(s is not None for s in eng.slots):
+        while pending and eng.submit(pending[0]):
+            done.append(pending.pop(0))
+        eng.step()
+        steps += 1
+        if steps > 2000:
+            break
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out or []) for r in done)
+    print(json.dumps({"arch": cfg.name, "requests": len(done),
+                      "tokens": toks, "engine_steps": steps,
+                      "tok_per_s": round(toks / dt, 1)}))
+
+
+if __name__ == "__main__":
+    main()

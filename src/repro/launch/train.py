@@ -1,0 +1,55 @@
+"""Training launcher.
+
+CPU-scale end-to-end driver (the real-hardware path only differs in mesh):
+
+  PYTHONPATH=src python -m repro.launch.train --arch h2o-danube --steps 50 \
+      --batch 8 --seq 128 [--reduced] [--ckpt /tmp/ckpt]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--moe-impl", default="tp", choices=["tp", "ep"])
+    args = ap.parse_args()
+
+    from repro.configs import get_arch
+    from repro.train.data import data_iter
+    from repro.train.loop import TrainConfig, train_loop
+    from repro.train import checkpoint as ckpt_mod
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    tcfg = TrainConfig(microbatches=args.microbatches,
+                       moe_impl=args.moe_impl)
+    data = data_iter(cfg, args.batch, args.seq)
+
+    cb = None
+    if args.ckpt:
+        saver = ckpt_mod.AsyncCheckpointer(args.ckpt)
+        cb = lambda state, step: saver.save_async(state, step)
+
+    state, hist = train_loop(cfg, tcfg, data, args.steps,
+                             checkpoint_cb=cb, checkpoint_every=20)
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    print(json.dumps({"arch": cfg.name, "steps": args.steps,
+                      "first_loss": first, "last_loss": last}))
+
+
+if __name__ == "__main__":
+    main()

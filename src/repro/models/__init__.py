@@ -1,0 +1,5 @@
+"""Model zoo: one composable stack covering all assigned architectures."""
+
+from . import layers, moe, rglru, ssm, transformer
+from .transformer import (decode_step, embed_tokens, forward, init_cache,
+                          init_params, lm_loss)

@@ -1,0 +1,310 @@
+"""Shared neural building blocks (pure functions over param pytrees).
+
+Sharding: activations/weights carry logical axes resolved through
+``repro.parallel.sharding`` rules; every constraint goes through ``shard()``
+so single-device smoke tests run the same code path with constraints off.
+
+All matmul-heavy ops accept ``dtype`` bf16 and keep reductions in fp32.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import shard, logical
+
+
+# ------------------------------------------------------------------ norms
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    out = (x32 - mu) * lax.rsqrt(var + eps) * scale + bias
+    return out.astype(x.dtype)
+
+
+def norm(x, p: Dict, kind: str):
+    if kind == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+def init_norm(key, d: int, kind: str, dtype=jnp.float32) -> Dict:
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+# ------------------------------------------------------------------- rope
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: (..., S)."""
+    freqs = rope_freqs(x.shape[-1], theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------- flash attention
+
+def _flash_mask(sq: int, block: int, sk: int, kv_i, q_pos, cfg) -> jnp.ndarray:
+    """(Sq, block) validity mask for KV block ``kv_i`` (recomputed from
+    iota in both fwd and bwd -- never a residual)."""
+    causal, window, chunk, prefix_len = cfg
+    kv_pos = kv_i * block + jnp.arange(block)
+    mask = jnp.ones((sq, block), bool)
+    if causal:
+        cm = q_pos[:, None] >= kv_pos[None, :]
+        if prefix_len:
+            cm = cm | (kv_pos[None, :] < prefix_len)
+        mask &= cm
+    if window:
+        mask &= (q_pos[:, None] - kv_pos[None, :]) < window
+    if chunk:
+        mask &= (q_pos[:, None] // chunk) == (kv_pos[None, :] // chunk)
+    mask &= (kv_pos < sk)[None, :]
+    return mask
+
+
+def _flash_fwd_impl(q, k, v, cfg, q_offset, block):
+    """Blockwise online-softmax forward.  Returns (out, lse).
+
+    GQA uses a *grouped* layout (B, Hkv, rep, ...) rather than repeating
+    K/V up to Hq: a repeat along the TP-sharded head axis is a cross-shard
+    reshard that GSPMD lowers to an all-to-all per block per layer (the
+    §Perf baseline measured TBs of it); grouped einsums keep every operand
+    sharded on the Hkv factor and are fully shard-local.
+    """
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    rep = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    nkv = -(-sk // block)
+    pad = nkv * block - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, nkv, block, hkv, d)
+    vb = v.reshape(b, nkv, block, hkv, d)
+    # (B, Hkv, rep, Sq, D)
+    qt = jnp.moveaxis((q * scale).astype(jnp.float32)
+                      .reshape(b, sq, hkv, rep, d), 1, 3)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kv_i, k_blk, v_blk = inputs
+        k_t = jnp.swapaxes(k_blk, 1, 2).astype(jnp.float32)  # (B,Hkv,blk,D)
+        v_t = jnp.swapaxes(v_blk, 1, 2).astype(jnp.float32)
+        s = jnp.einsum("bgrqd,bgkd->bgrqk", qt, k_t)   # (B,Kv,rep,Sq,blk)
+        mask = _flash_mask(sq, block, sk, kv_i, q_pos, cfg)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bgrqk,bgkd->bgrqd", p, v_t)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, rep, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, rep, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, rep, sq, d), jnp.float32)
+    (m, l, acc), _ = lax.scan(
+        body, (m0, l0, a0),
+        (jnp.arange(nkv), jnp.swapaxes(kb, 0, 1), jnp.swapaxes(vb, 0, 1)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]      # (B,Kv,rep,Sq,D)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))          # (B,Kv,rep,Sq)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, hq, d)
+    return out.astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash(q, k, v, cfg, q_offset, block):
+    return _flash_fwd_impl(q, k, v, cfg, q_offset, block)[0]
+
+
+def _flash_vjp_fwd(q, k, v, cfg, q_offset, block):
+    out, lse = _flash_fwd_impl(q, k, v, cfg, q_offset, block)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(cfg, q_offset, block, res, g):
+    """Flash backward: rescan KV blocks, recompute scores from (q,k,lse).
+    No O(S^2) residuals survive the forward pass.  Grouped-GQA layout
+    (see _flash_fwd_impl) keeps everything shard-local; the dk/dv group
+    reduction is a local sum over the rep factor."""
+    q, k, v, out, lse = res
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    rep = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    nkv = -(-sk // block)
+    pad = nkv * block - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = jnp.swapaxes(k.reshape(b, nkv, block, hkv, d), 0, 1)
+    vb = jnp.swapaxes(v.reshape(b, nkv, block, hkv, d), 0, 1)
+    grp = lambda x: shard(
+        jnp.moveaxis(x.astype(jnp.float32).reshape(b, sq, hkv, rep, d), 1, 3),
+        logical("batch", "kv_heads", None, None, None))
+    qt = grp(q)                                              # (B,Kv,rep,Sq,D)
+    gt = grp(g)
+    ot = grp(out)
+    delta = jnp.sum(gt * ot, axis=-1)                        # (B,Kv,rep,Sq)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(dq_acc, inputs):
+        kv_i, k_blk, v_blk = inputs
+        k_t = jnp.swapaxes(k_blk, 1, 2).astype(jnp.float32)  # (B,Hkv,blk,D)
+        v_t = jnp.swapaxes(v_blk, 1, 2).astype(jnp.float32)
+        k_t = shard(k_t, logical("batch", "kv_heads", None, None))
+        v_t = shard(v_t, logical("batch", "kv_heads", None, None))
+        s = jnp.einsum("bgrqd,bgkd->bgrqk", qt * scale, k_t)
+        s = shard(s, logical("batch", "kv_heads", None, None, None))
+        mask = _flash_mask(sq, block, sk, kv_i, q_pos, cfg)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jnp.exp(s - lse[..., None])                      # (B,Kv,r,Sq,blk)
+        dv = jnp.einsum("bgrqk,bgrqd->bgkd", p, gt)
+        dp = jnp.einsum("bgrqd,bgkd->bgrqk", gt, v_t)
+        ds = p * (dp - delta[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("bgrqk,bgkd->bgrqd", ds, k_t)
+        dk = jnp.einsum("bgrqk,bgrqd->bgkd", ds, qt)
+        return dq_acc, (dk, dv)
+
+    dq0 = jnp.zeros((b, hkv, rep, sq, d), jnp.float32)
+    dq, (dk_blocks, dv_blocks) = lax.scan(
+        body, dq0, (jnp.arange(nkv), kb, vb))
+    dq = jnp.moveaxis(dq, 3, 1).reshape(b, sq, hq, d).astype(q.dtype)
+    dk = jnp.moveaxis(dk_blocks, 0, 2)                       # (B,Hkv,nkv,blk,D)
+    dk = jnp.swapaxes(dk.reshape(b, hkv, nkv * block, d), 1, 2)[:, :sk]
+    dv = jnp.moveaxis(dv_blocks, 0, 2)
+    dv = jnp.swapaxes(dv.reshape(b, hkv, nkv * block, d), 1, 2)[:, :sk]
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def flash_attention_xla(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True, window: int = 0,
+                        chunk: int = 0, prefix_len: int = 0,
+                        q_offset: int = 0, block: int = 512) -> jnp.ndarray:
+    """Blockwise online-softmax attention in pure XLA with a flash-style
+    custom VJP (backward rescans KV blocks; no O(S^2) residuals), so
+    32k-prefill and 4k-train graphs stay within HBM.  Mirrors
+    kernels/flash_attention/ref.py; the Pallas kernel replaces it on TPU.
+
+    q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D).  GQA via head replication
+    factor Hq // Hkv.  ``window`` > 0 = sliding-window; ``chunk`` > 0 =
+    chunk-local (llama4 iRoPE); ``prefix_len`` > 0 = prefix-LM.
+    """
+    cfg = (bool(causal), int(window), int(chunk), int(prefix_len))
+    return _flash(q, k, v, cfg, int(q_offset), int(block))
+
+
+def decode_attention_xla(q: jnp.ndarray, k_cache: jnp.ndarray,
+                         v_cache: jnp.ndarray, length) -> jnp.ndarray:
+    """Single-position attention against a (B, S, Hkv, D) cache.
+
+    q: (B, 1, Hq, D); ``length`` (B,) = number of valid cache entries.
+    Memory-bound; mirrors kernels/decode_attention/ref.py.
+    """
+    b, _, hq, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    rep = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    # grouped GQA: no repeat along the (sharded) head axis
+    qh = (q[:, 0].astype(jnp.float32) * scale).reshape(b, hkv, rep, d)
+    kt = k_cache.astype(jnp.float32)
+    vt = v_cache.astype(jnp.float32)
+    s_logits = jnp.einsum("bgrd,bsgd->bgrs", qh, kt)       # (B,Kv,rep,S)
+    valid = jnp.arange(s)[None, :] < length[:, None]
+    s_logits = jnp.where(valid[:, None, None, :], s_logits, -1e30)
+    p = jax.nn.softmax(s_logits, axis=-1)
+    out = jnp.einsum("bgrs,bsgd->bgrd", p, vt)
+    return out.reshape(b, 1, hq, d).astype(q.dtype)        # (B, 1, Hq, D)
+
+
+def decode_attention_cache_xla(q: jnp.ndarray, k_cache: jnp.ndarray,
+                               v_cache: jnp.ndarray, slot_pos: jnp.ndarray,
+                               q_pos: jnp.ndarray, *, window: int = 0,
+                               chunk: int = 0) -> jnp.ndarray:
+    """Single-token attention against a ring-buffer cache with per-slot
+    absolute positions.
+
+    q: (B, 1, Hq, D); caches: (B, W, Hkv, D); slot_pos: (B, W) absolute
+    position stored in each slot (-1 = empty); q_pos: (B,).
+    """
+    b, _, hq, d = q.shape
+    _, w, hkv, _ = k_cache.shape
+    rep = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    # grouped GQA: no repeat along the (sharded) head axis
+    qh = (q[:, 0].astype(jnp.float32) * scale).reshape(b, hkv, rep, d)
+    kt = k_cache.astype(jnp.float32)
+    vt = v_cache.astype(jnp.float32)
+    s_logits = jnp.einsum("bgrd,bsgd->bgrs", qh, kt)         # (B,Kv,rep,W)
+    valid = (slot_pos >= 0) & (slot_pos <= q_pos[:, None])
+    if window:
+        valid &= (q_pos[:, None] - slot_pos) < window
+    if chunk:
+        valid &= (slot_pos // chunk) == (q_pos[:, None] // chunk)
+    s_logits = jnp.where(valid[:, None, None, :], s_logits, -1e30)
+    p = jax.nn.softmax(s_logits, axis=-1)
+    out = jnp.einsum("bgrs,bsgd->bgrd", p, vt)
+    return out.reshape(b, 1, hq, d).astype(q.dtype)          # (B, 1, Hq, D)
+
+
+# --------------------------------------------------------------- dense mlp
+
+def mlp_apply(p: Dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    """Column-parallel in, row-parallel out (Megatron).  The ff dim is
+    sharded on the model axis; the down-projection emits a partial sum that
+    GSPMD (or the ring collective in ring mode) reduces."""
+    if act in ("swiglu", "geglu"):
+        g = x @ p["w_gate"]
+        u = x @ p["w_up"]
+        g = shard(g, logical("batch", None, "ff"))
+        h = (jax.nn.silu(g) if act == "swiglu" else
+             jax.nn.gelu(g, approximate=True)) * u
+    else:
+        h = jax.nn.gelu(x @ p["w_up"], approximate=True)
+        h = shard(h, logical("batch", None, "ff"))
+    out = h @ p["w_down"]
+    return shard(out, logical("batch", "seq_sp", None))
+
+
+def init_mlp(key, d: int, f: int, act: str, dtype=jnp.bfloat16) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d)
+    s_ff = 1.0 / math.sqrt(f)
+    p = {"w_up": (jax.random.normal(k1, (d, f)) * s_in).astype(dtype),
+         "w_down": (jax.random.normal(k2, (f, d)) * s_ff).astype(dtype)}
+    if act in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(k3, (d, f)) * s_in).astype(dtype)
+    return p

@@ -1,0 +1,161 @@
+"""Mixture-of-Experts layer with the paper's two execution modes.
+
+* ``moe_impl="tp"``  (paper default, §2.3 key finding): every expert's FFN is
+  sharded over the model axis exactly like a dense MLP.  Computation is
+  perfectly balanced regardless of routing (no expert-imbalance stragglers)
+  and the only HBD traffic is the ring all-reduce of the expert outputs --
+  the same neighbor-only pattern as dense TP.
+
+* ``moe_impl="ep"``: experts are partitioned over the model axis and tokens
+  travel to their experts via all-to-all.  ``a2a_impl="binary"`` uses the
+  Appendix-G Binary-Exchange algorithm over XOR partners (the re-wired
+  +-2^k backup links); ``a2a_impl="xla"`` uses the native collective.
+
+Both modes run inside one ``shard_map`` over the full mesh so dispatch is
+strictly local to each data shard (capacity is per-shard, scatters never
+cross devices -- the property GSPMD cannot guarantee for sort/scatter MoE).
+
+Dispatch is capacity-based (sort-free scatter): position-in-expert comes from
+a cumulative sum over the top-k assignments; tokens beyond
+``capacity_factor`` are dropped (the no-token-left-behind imbalance the paper
+discusses in Table 4 is benchmarked in the MFU simulator instead).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.collectives import (all_to_all_baseline,
+                                        binary_exchange_all_to_all,
+                                        ring_all_reduce)
+
+
+def init_moe(key, cfg, dtype=jnp.bfloat16) -> Dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    s_in, s_ff = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * s_in).astype(jnp.float32),
+        "w_up": (jax.random.normal(ks[1], (e, d, f)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[2], (e, f, d)) * s_ff).astype(dtype),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(ks[3], (e, d, f)) * s_in).astype(dtype)
+    if cfg.n_shared_experts:
+        from .layers import init_mlp
+        p["shared"] = init_mlp(ks[4], d, f * cfg.n_shared_experts, cfg.act, dtype)
+    return p
+
+
+def _act(h, g, act: str):
+    if act == "swiglu":
+        return jax.nn.silu(g) * h
+    if act == "geglu":
+        return jax.nn.gelu(g, approximate=True) * h
+    return jax.nn.gelu(h, approximate=True)
+
+
+def _dispatch(x2d: jnp.ndarray, router_w: jnp.ndarray, e: int, k: int,
+              capacity: int):
+    """Route T local tokens: returns (buffer (E,C,d), combine metadata)."""
+    t, d = x2d.shape
+    logits = x2d.astype(jnp.float32) @ router_w                 # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = lax.top_k(probs, k)                            # (T, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = topi.reshape(-1)                                   # (T*k,)
+    one_hot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)        # (T*k, E)
+    pos = jnp.cumsum(one_hot, axis=0) * one_hot                 # rank within expert
+    flat_pos = pos.sum(-1) - 1                                  # (T*k,)
+    keep = flat_pos < capacity
+
+    tok_idx = jnp.repeat(jnp.arange(t), k)
+    buf = jnp.zeros((e, capacity, d), x2d.dtype)
+    buf = buf.at[jnp.where(keep, flat_e, e - 1),
+                 jnp.where(keep, flat_pos, capacity - 1)].add(
+        x2d[tok_idx] * keep[:, None].astype(x2d.dtype),
+        mode="drop")
+    meta = (flat_e, flat_pos, keep, topw.reshape(-1), tok_idx, t)
+    return buf, meta
+
+
+def _combine(out_buf: jnp.ndarray, meta, dtype) -> jnp.ndarray:
+    flat_e, flat_pos, keep, w, tok_idx, t = meta
+    gathered = out_buf[flat_e, jnp.clip(flat_pos, 0, out_buf.shape[1] - 1)]
+    gathered = gathered * (w * keep)[:, None].astype(out_buf.dtype)
+    y = jnp.zeros((t, out_buf.shape[-1]), out_buf.dtype)
+    return y.at[tok_idx].add(gathered).astype(dtype)
+
+
+def moe_apply_local(p: Dict, cfg, x: jnp.ndarray, *, axis_name: str = "model",
+                    moe_impl: str = "tp", a2a_impl: str = "binary",
+                    ar_impl: str = "psum", tp: int = 1) -> jnp.ndarray:
+    """Shard-local MoE body (call inside shard_map; tp==1 also runs plainly).
+
+    x: (Bt, S, d) local tokens.  Expert weights are passed *sharded*:
+      tp mode: w_up/w_gate (E, d, f/tp), w_down (E, f/tp, d)
+      ep mode: w_up/w_gate (E/tp, d, f), w_down (E/tp, f, d)
+    """
+    bt, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    x2d = x.reshape(-1, d)
+    t = x2d.shape[0]
+
+    if moe_impl == "tp" or tp == 1:
+        capacity = max(1, int(cfg.capacity_factor * t * k / e))
+        buf, meta = _dispatch(x2d, p["router"], e, k, capacity)
+        h = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+        g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]) if "w_gate" in p else None
+        h = _act(h, g, cfg.act)
+        out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])   # partial over f/tp
+        # combine while still partial: (T,d) is k*capacity_factor x smaller
+        # than (E,C,d), so the ring all-reduce moves less -- and the shared
+        # expert's partial folds into the same reduction for free.
+        y = _combine(out, meta, x.dtype)
+        if "shared" in p:
+            sp = p["shared"]
+            g2 = x2d @ sp["w_gate"] if "w_gate" in sp else None
+            u2 = x2d @ sp["w_up"]
+            y = y + _act(u2, g2, cfg.act) @ sp["w_down"]
+        if tp > 1:
+            y = ring_all_reduce(y, axis_name, impl=ar_impl)
+        return y.reshape(bt, s, d)
+    else:  # EP: experts live on other ranks; tokens travel
+        # the incoming tokens are REPLICATED over the model axis (batch is
+        # data-sharded), so each EP rank dispatches only its 1/tp slice --
+        # otherwise every expert would process the same token tp times.
+        e_loc = e // tp
+        idx = lax.axis_index(axis_name)
+        t_loc = t // tp
+        x_loc = lax.dynamic_slice_in_dim(x2d, idx * t_loc, t_loc, 0)
+        capacity = max(1, int(cfg.capacity_factor * t_loc * k / e))
+        buf, meta = _dispatch(x_loc, p["router"], e, k, capacity)
+        # (E, C, d) -> (tp, e_loc, C, d): slab r goes to rank r
+        slabs = buf.reshape(tp, e_loc, capacity, d)
+        a2a = (binary_exchange_all_to_all if a2a_impl == "binary"
+               else all_to_all_baseline)
+        recv = a2a(slabs, axis_name)          # (tp, e_loc, C, d) from each src
+        toks = jnp.moveaxis(recv, 0, 1).reshape(e_loc, tp * capacity, d)
+        h = jnp.einsum("ecd,edf->ecf", toks, p["w_up"])
+        g = jnp.einsum("ecd,edf->ecf", toks, p["w_gate"]) if "w_gate" in p else None
+        h = _act(h, g, cfg.act)
+        out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+        back = jnp.moveaxis(out.reshape(e_loc, tp, capacity, d), 1, 0)
+        out_buf = a2a(back, axis_name).reshape(e, capacity, d)
+        y_loc = _combine(out_buf, meta, x.dtype)       # (t_loc, d)
+        if "shared" in p:  # EP mode keeps the shared expert replicated
+            sp = p["shared"]
+            g2 = x_loc @ sp["w_gate"] if "w_gate" in sp else None
+            u2 = x_loc @ sp["w_up"]
+            y_loc = y_loc + _act(u2, g2, cfg.act) @ sp["w_down"]
+        # re-assemble the replicated (t, d) output across EP ranks
+        y = jnp.zeros((t, y_loc.shape[-1]), y_loc.dtype)
+        y = lax.dynamic_update_slice_in_dim(y, y_loc, idx * t_loc, 0)
+        y = lax.psum(y, axis_name)
+    return y.reshape(bt, s, d)

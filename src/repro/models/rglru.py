@@ -1,0 +1,118 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Griffin recurrent block: two column-parallel input projections (gate branch
+and recurrent branch), causal depthwise conv, the Real-Gated LRU recurrence
+
+    r_t = sigmoid(x W_r + b_r)          (recurrence gate)
+    i_t = sigmoid(x W_i + b_i)          (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+then gated output projection.  Gates are computed from the block input
+(d_model, replicated) so the gate matmuls are clean column-parallel ops with
+no extra collectives -- a deliberate TP-friendly deviation from Griffin's
+post-conv gating, noted in DESIGN.md.
+
+Training evaluates the linear recurrence with an associative scan over the
+sequence (log-depth); decode is the plain one-step update.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import shard, logical
+
+C_FACTOR = 8.0
+
+
+def init_rglru_block(key, cfg, dtype=jnp.bfloat16) -> Dict:
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "w_x": (jax.random.normal(ks[0], (d, w)) * s).astype(dtype),
+        "w_gate": (jax.random.normal(ks[1], (d, w)) * s).astype(dtype),
+        "w_r": (jax.random.normal(ks[2], (d, w)) * s).astype(dtype),
+        "w_i": (jax.random.normal(ks[3], (d, w)) * s).astype(dtype),
+        "b_r": jnp.zeros((w,), jnp.float32),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        # Lambda init so a^c spreads over (0.9, 0.999)
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, w)) / C_FACTOR)).astype(jnp.float32),
+        "conv_w": (jax.random.normal(ks[4], (cfg.conv_width, w)) * 0.2
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_out": (jax.random.normal(ks[5], (w, d)) / math.sqrt(w)).astype(dtype),
+    }
+
+
+def _lru_scan(a: jnp.ndarray, bx: jnp.ndarray,
+              h0: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """h_t = a_t h_{t-1} + bx_t via associative scan over S.
+    a, bx: (Bt, S, W) fp32.  Returns (h (Bt,S,W), final h)."""
+    if h0 is not None:
+        # fold the carry-in into the first step
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    ah, bh = lax.associative_scan(combine, (a, bx), axis=1)
+    return bh, bh[:, -1]
+
+
+def rglru_block_apply(p: Dict, cfg, x: jnp.ndarray,
+                      cache: Optional[Dict] = None, decode: bool = False):
+    """x: (Bt, S, d) -> (Bt, S, d).  cache = {"h", "conv"} for decode."""
+    w = cfg.rnn_width or cfg.d_model
+    gate = jax.nn.gelu((x @ p["w_gate"]), approximate=True)
+    gate = shard(gate, logical("batch", None, "ff"))
+    xb = x @ p["w_x"]
+    xb = shard(xb, logical("batch", None, "ff"))
+
+    # causal depthwise conv on the recurrent branch
+    width = p["conv_w"].shape[0]
+    if decode:
+        padded = jnp.concatenate([cache["conv"], xb], axis=1)
+        new_conv = padded[:, -(width - 1):]
+    else:
+        pad = jnp.zeros((xb.shape[0], width - 1, w), xb.dtype)
+        padded = jnp.concatenate([pad, xb], axis=1)
+        new_conv = padded[:, -(width - 1):]
+    xc = sum(padded[:, i:i + xb.shape[1]] * p["conv_w"][i]
+             for i in range(width)) + p["conv_b"]
+
+    r = jax.nn.sigmoid((x @ p["w_r"]).astype(jnp.float32) + p["b_r"])
+    i = jax.nn.sigmoid((x @ p["w_i"]).astype(jnp.float32) + p["b_i"])
+    log_a = -C_FACTOR * jax.nn.softplus(p["lam"]) * r       # (Bt,S,W)
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * xc.astype(jnp.float32))
+
+    if decode:
+        h0 = cache["h"].astype(jnp.float32)
+        h = a[:, 0] * h0 + gated_in[:, 0]
+        hs = h[:, None]
+        new_cache = {"h": h.astype(x.dtype), "conv": new_conv}
+    else:
+        hs, h_last = _lru_scan(a, gated_in, None)
+        new_cache = None
+
+    out = (hs.astype(x.dtype) * gate) @ p["w_out"]
+    out = shard(out, logical("batch", "seq_sp", None))
+    return out, new_cache
+
+
+def init_rglru_cache(cfg, batch: int, dtype=jnp.bfloat16) -> Dict:
+    w = cfg.rnn_width or cfg.d_model
+    return {"h": jnp.zeros((batch, w), dtype),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype)}

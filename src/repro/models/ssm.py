@@ -1,0 +1,207 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Chunked SSD: intra-chunk attention-like matmuls + inter-chunk state
+recurrence, O(S) in sequence length with MXU-friendly (Q x Q) tiles.
+``ssd_chunked`` mirrors kernels/ssd_scan/ref.py; the Pallas kernel replaces
+the inner chunk compute on real TPUs.
+
+TP sharding: d_inner and the SSD heads ride the model axis; B/C (single
+group) are replicated so every head shard contracts the full state locally.
+Projections are kept *separate* (w_z/w_x/w_B/w_C/w_dt) rather than fused so
+every split boundary aligns with a shard boundary -- a fused in_proj would
+force GSPMD to reshard at the z/x/B/C/dt splits.  The recurrence itself is
+per-head: TP inserts no collective inside the scan, the only HBD traffic is
+the out-projection all-reduce (the paper's neighbor-ring pattern).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import shard, logical
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                B: jnp.ndarray, C: jnp.ndarray, chunk: int,
+                init_state: jnp.ndarray | None = None,
+                return_state: bool = False):
+    """Chunked state-space-dual scan.
+
+    x:  (Bt, S, H, P)   values (already gated/conv'd)
+    dt: (Bt, S, H)      positive step sizes (post-softplus)
+    A:  (H,)            negative decay rates
+    B:  (Bt, S, N)      input projection (single group, broadcast over H)
+    C:  (Bt, S, N)      output projection
+    Returns y (Bt, S, H, P) [and final state (Bt, H, N, P)].
+    """
+    bt, s, h, p = x.shape
+    n = B.shape[-1]
+    nc = s // chunk
+    assert nc * chunk == s, "seq must be a multiple of the chunk size"
+
+    xb = x.reshape(bt, nc, chunk, h, p)
+    dtb = dt.reshape(bt, nc, chunk, h)
+    Bb = B.reshape(bt, nc, chunk, n)
+    Cb = C.reshape(bt, nc, chunk, n)
+
+    dA = dtb * A  # (Bt, nc, Q, H) negative increments
+    cs = jnp.cumsum(dA, axis=2)                       # within-chunk cumsum
+    total = cs[:, :, -1]                              # (Bt, nc, H)
+
+    # intra-chunk: Y[i] = sum_{j<=i} C_i.B_j * exp(cs_i - cs_j) * dt_j * x_j
+    scores = jnp.einsum("bcin,bcjn->bcij", Cb, Bb)    # (Bt,nc,Q,Q)
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # (Bt,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask the exponent (not the product): exp of the +large upper triangle
+    # would overflow and poison gradients through the where
+    l_mat = jnp.exp(jnp.where(causal[None, None, :, :, None], seg, -1e30))
+    xbar = xb * dtb[..., None]                        # (Bt,nc,Q,H,P)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, l_mat, xbar)
+
+    # chunk states: state_c = sum_j exp(total - cs_j) B_j (x_j dt_j)
+    decay_end = jnp.exp(total[:, :, None, :] - cs)     # (Bt,nc,Q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bb, decay_end, xbar)
+
+    # inter-chunk recurrence over chunks
+    chunk_decay = jnp.exp(total)                       # (Bt,nc,H)
+
+    def step(carry, inp):
+        st = carry                                     # (Bt,H,N,P)
+        dec, add = inp                                 # (Bt,H), (Bt,H,N,P)
+        new = st * dec[:, :, None, None] + add
+        return new, st                                 # emit the *previous*
+
+    st0 = (init_state if init_state is not None
+           else jnp.zeros((bt, h, n, p), x.dtype))
+    final, prevs = lax.scan(step,
+                            st0.astype(jnp.float32),
+                            (jnp.moveaxis(chunk_decay, 1, 0).astype(jnp.float32),
+                             jnp.moveaxis(states, 1, 0).astype(jnp.float32)))
+    prev_states = jnp.moveaxis(prevs, 0, 1)            # (Bt,nc,H,N,P)
+
+    # inter-chunk output: y[i] += C_i . (exp(cs_i) * prev_state)
+    in_decay = jnp.exp(cs)                             # (Bt,nc,Q,H)
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp",
+                         Cb, prev_states.astype(x.dtype), in_decay)
+
+    y = (y_intra + y_inter).reshape(bt, s, h, p)
+    if return_state:
+        return y, final.astype(x.dtype)
+    return y
+
+
+def ssd_decode_step(state: jnp.ndarray, x: jnp.ndarray, dt: jnp.ndarray,
+                    A: jnp.ndarray, B: jnp.ndarray, C: jnp.ndarray):
+    """Single-token recurrence.  state: (Bt,H,N,P); x: (Bt,H,P);
+    dt: (Bt,H); B/C: (Bt,N)."""
+    dec = jnp.exp(dt * A)                              # (Bt,H)
+    add = jnp.einsum("bn,bh,bhp->bhnp", B, dt, x)
+    new_state = state * dec[:, :, None, None] + add
+    y = jnp.einsum("bn,bhnp->bhp", C, new_state)
+    return y, new_state
+
+
+# ------------------------------------------------------------- full block
+
+def init_ssd_block(key, cfg, dtype=jnp.bfloat16) -> Dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 7)
+    s_in = 1.0 / math.sqrt(d)
+    return {
+        "w_z": (jax.random.normal(ks[0], (d, di)) * s_in).astype(dtype),
+        "w_x": (jax.random.normal(ks[1], (d, di)) * s_in).astype(dtype),
+        "w_B": (jax.random.normal(ks[2], (d, n)) * s_in).astype(dtype),
+        "w_C": (jax.random.normal(ks[3], (d, n)) * s_in).astype(dtype),
+        "w_dt": (jax.random.normal(ks[4], (d, h)) * s_in).astype(dtype),
+        "conv_x_w": (jax.random.normal(ks[5], (cfg.conv_width, di)) * 0.2
+                     ).astype(dtype),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_B_w": (jax.random.normal(ks[6], (cfg.conv_width, n)) * 0.2
+                     ).astype(dtype),
+        "conv_B_b": jnp.zeros((n,), dtype),
+        "conv_C_w": (jax.random.normal(ks[6], (cfg.conv_width, n)) * 0.2
+                     ).astype(dtype),
+        "conv_C_b": jnp.zeros((n,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[0], (di, d)) / math.sqrt(di)
+                     ).astype(dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 cache: jnp.ndarray | None = None):
+    """Depthwise causal conv over (Bt, S, Ch) with kernel (W, Ch)."""
+    width = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width)) + b
+    new_cache = xp[:, -(width - 1):]
+    return jax.nn.silu(out), new_cache
+
+
+def ssd_block_apply(p: Dict, cfg, x: jnp.ndarray,
+                    cache: Dict | None = None, decode: bool = False):
+    """x: (Bt, S, d) -> (Bt, S, d); cache = {state, conv_x, conv_B, conv_C}."""
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hd = cfg.ssm_head_dim
+    z = x @ p["w_z"]
+    xs = x @ p["w_x"]
+    xs = shard(xs, logical("batch", None, "ff"))
+    z = shard(z, logical("batch", None, "ff"))
+    B_raw = x @ p["w_B"]
+    C_raw = x @ p["w_C"]
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    new_cache: Dict = {}
+    cx = cache.get("conv_x") if cache else None
+    cB = cache.get("conv_B") if cache else None
+    cC = cache.get("conv_C") if cache else None
+    xs, new_cache["conv_x"] = _causal_conv(xs, p["conv_x_w"], p["conv_x_b"], cx)
+    B, new_cache["conv_B"] = _causal_conv(B_raw, p["conv_B_w"], p["conv_B_b"], cB)
+    C, new_cache["conv_C"] = _causal_conv(C_raw, p["conv_C_w"], p["conv_C_b"], cC)
+
+    if decode:
+        xh = xs[:, 0].reshape(-1, h, hd)
+        y, new_cache["state"] = ssd_decode_step(
+            cache["state"].astype(jnp.float32), xh.astype(jnp.float32),
+            dt[:, 0], A, B[:, 0].astype(jnp.float32),
+            C[:, 0].astype(jnp.float32))
+        y = y + p["D"][:, None] * xh.astype(jnp.float32)
+        y = y.reshape(x.shape[0], 1, di).astype(x.dtype)
+    else:
+        xh = xs.reshape(xs.shape[0], xs.shape[1], h, hd)
+        y = ssd_chunked(xh, dt, A, B, C, cfg.ssm_chunk)
+        y = y + p["D"][None, None, :, None] * xh
+        y = y.reshape(x.shape[0], x.shape[1], di)
+        new_cache = None
+
+    # gated RMSNorm (Mamba-2); mean over the (possibly sharded) di dim
+    g = y * jax.nn.silu(z)
+    g32 = g.astype(jnp.float32)
+    var = jnp.mean(g32 * g32, axis=-1, keepdims=True)
+    g = (g32 * lax.rsqrt(var + 1e-6) * (1 + p["norm_scale"])).astype(x.dtype)
+    out = g @ p["out_proj"]
+    out = shard(out, logical("batch", "seq_sp", None))
+    return out, new_cache
+
+
+def init_ssd_cache(cfg, batch: int, dtype=jnp.bfloat16) -> Dict:
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                            cfg.ssm_head_dim), dtype),
+        "conv_x": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), dtype),
+        "conv_B": jnp.zeros((batch, cfg.conv_width - 1, cfg.ssm_state), dtype),
+        "conv_C": jnp.zeros((batch, cfg.conv_width - 1, cfg.ssm_state), dtype),
+    }

@@ -1,0 +1,5 @@
+"""Distribution layer: sharding rules, ring collectives, pipeline."""
+
+from . import collectives, sharding
+from .sharding import (get_mesh, get_rules, logical, mesh_axes,
+                       parallel_rules, resolve, set_mesh, set_rules, shard)

@@ -1,0 +1,133 @@
+"""Logical-axis sharding rules (MaxText-style) + constraint helper.
+
+The launcher installs a rule set mapping logical axis names to physical mesh
+axes; model code annotates tensors with logical axes only.  With no rules
+installed (unit tests, single device) every constraint is a no-op, so the
+exact same model code runs everywhere.
+
+Physical mesh axes (launch/mesh.py):
+  * ``model``  -- the HBD / TP ring axis (the paper's OCSTrx domain)
+  * ``data``   -- intra-pod DP (DCN, ToR-local after orchestration)
+  * ``pod``    -- cross-pod DP (multi-pod mesh only)
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+# Default logical->physical rules for the production mesh.
+DEFAULT_RULES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),
+    "seq": None,            # sequence replicated by default
+    "seq_sp": "model",      # sequence parallelism: residual stream (and its
+                            # remat-saved copies) seq-sharded over TP; GSPMD
+                            # turns the TP all-reduces into RS+AG pairs
+    "seq_shard": "data",    # long-context decode: KV cache sharded over data
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "vocab": "model",
+    "embed": None,          # d_model replicated
+    "experts": None,        # TP-MoE (paper default): experts replicated,
+                            # each expert's ff sharded on "model"
+    "experts_ep": "model",  # EP mode: experts sharded on the model axis
+    "layers": None,
+}
+
+_state = threading.local()
+
+
+def set_rules(rules: Optional[Dict[str, Axis]]) -> None:
+    _state.rules = rules
+
+
+def get_rules() -> Optional[Dict[str, Axis]]:
+    return getattr(_state, "rules", None)
+
+
+def set_mesh(mesh) -> None:
+    _state.mesh = mesh
+
+
+def get_mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextmanager
+def parallel_rules(rules: Optional[Dict[str, Axis]], mesh=None):
+    prev, prev_mesh = get_rules(), get_mesh()
+    set_rules(rules)
+    set_mesh(mesh)
+    try:
+        yield
+    finally:
+        set_rules(prev)
+        set_mesh(prev_mesh)
+
+
+def logical(*axes: Optional[str]) -> Tuple[Optional[str], ...]:
+    """Readability alias: logical("batch", None, "ff")."""
+    return axes
+
+
+def resolve(axes: Tuple[Optional[str], ...]) -> Optional[P]:
+    """Map logical axes to a PartitionSpec under the installed rules."""
+    rules = get_rules()
+    if rules is None:
+        return None
+    phys = []
+    for ax in axes:
+        if ax is None:
+            phys.append(None)
+        else:
+            phys.append(rules.get(ax))
+    return P(*phys)
+
+
+def shard(x, axes: Tuple[Optional[str], ...]):
+    """with_sharding_constraint under the installed rules (no-op without).
+
+    Axes whose mesh extent does not divide the dim are dropped (decode's
+    seq=1, whisper's 1500-frame encoder, reduced smoke configs)."""
+    spec = resolve(axes)
+    if spec is None:
+        return x
+    mesh = get_mesh()
+    fixed = []
+    for dim, ax in zip(x.shape, spec):
+        if ax is not None and mesh is not None:
+            names = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for n in names:
+                size *= mesh.shape[n]
+            if size == 0 or dim % size:
+                ax = None
+        fixed.append(ax)
+    return jax.lax.with_sharding_constraint(x, P(*fixed))
+
+
+def mesh_axes(rules: Optional[Dict[str, Axis]] = None,
+              multi_pod: bool = False) -> Dict[str, Axis]:
+    """Rule set for the production meshes; single-pod drops the pod axis."""
+    r = dict(DEFAULT_RULES)
+    if rules:
+        r.update(rules)
+    if not multi_pod:
+        r = {k: _drop_pod(v) for k, v in r.items()}
+    return r
+
+
+def _drop_pod(v: Axis) -> Axis:
+    if v == "pod":
+        return None
+    if isinstance(v, tuple):
+        t = tuple(a for a in v if a != "pod")
+        return t if len(t) > 1 else (t[0] if t else None)
+    return v

@@ -1,0 +1,149 @@
+"""PartitionSpecs for parameter and cache pytrees.
+
+Name-based trailing-dim rules: each known leaf name maps to a logical spec
+for its trailing dims; any extra leading dims (scan stacking) are padded with
+None.  This keeps specs correct for both stacked ("groups") and unstacked
+("rest") layers.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .sharding import Axis, resolve
+
+# logical trailing-dim specs per leaf name.  The "fsdp" axis (-> data) fully
+# shards weights + optimizer states across the cluster: mandatory for the
+# 400B-class archs at 16 GB/chip; GSPMD inserts the just-in-time all-gathers.
+_PARAM_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # attention
+    "wq": ("fsdp", "heads"), "wk": ("fsdp", "kv_heads"),
+    "wv": ("fsdp", "kv_heads"), "wo": ("heads", "fsdp"),
+    "bq": ("heads",), "bk": ("kv_heads",), "bv": ("kv_heads",),
+    # dense mlp (3D MoE expert weights align on trailing dims)
+    "w_up": ("fsdp", "ff"), "w_gate": ("fsdp", "ff"), "w_down": ("ff", "fsdp"),
+    # ssd
+    "w_z": ("fsdp", "ff"), "w_x": ("fsdp", "ff"), "w_B": ("fsdp", None),
+    "w_C": ("fsdp", None), "w_dt": ("fsdp", "heads"),
+    "conv_x_w": (None, "ff"), "conv_x_b": ("ff",),
+    "conv_B_w": (None, None), "conv_B_b": (None,),
+    "conv_C_w": (None, None), "conv_C_b": (None,),
+    "A_log": ("heads",), "D": ("heads",), "dt_bias": ("heads",),
+    "norm_scale": ("ff",), "out_proj": ("ff", "fsdp"),
+    # rglru
+    "w_r": ("fsdp", "ff"), "w_i": ("fsdp", "ff"), "b_r": ("ff",), "b_i": ("ff",),
+    "lam": ("ff",), "conv_w": (None, "ff"), "conv_b": ("ff",),
+    "w_out": ("ff", "fsdp"),
+    # router & norms
+    "router": ("fsdp", None), "scale": (None,), "bias": (None,),
+}
+
+_MOE_EP_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    "w_up": ("experts_ep", None, None), "w_gate": ("experts_ep", None, None),
+    "w_down": ("experts_ep", None, None),
+}
+
+_CACHE_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    "k": ("batch", "seq_cache", "kv_heads", None),
+    "v": ("batch", "seq_cache", "kv_heads", None),
+    "pos": ("batch", "seq_cache"),
+    "xk": ("batch", None, "kv_heads", None),
+    "xv": ("batch", None, "kv_heads", None),
+    "state": ("batch", "heads", None, None),
+    "conv_x": ("batch", None, "ff"),
+    "conv_B": ("batch", None, None),
+    "conv_C": ("batch", None, None),
+    "conv": ("batch", None, "ff"),
+    "h": ("batch", "ff"),
+}
+
+
+def _leaf_spec(path, leaf, rules_table, extra: Dict, default_rules) -> P:
+    name = None
+    in_moe = False
+    for entry in path:
+        k = getattr(entry, "key", getattr(entry, "name", None))
+        if k == "moe":
+            in_moe = True
+        if k == "shared":   # the shared expert is a plain TP-sharded MLP
+            in_moe = False
+        if isinstance(k, str):
+            name = k
+    if name == "embed":
+        return resolve(("vocab", None)) or P()
+    if name == "lm_head":
+        return resolve((None, "vocab")) or P()
+    table = dict(rules_table)
+    if in_moe and extra.get("moe_impl") == "ep":
+        table.update(_MOE_EP_RULES)
+    elif in_moe:
+        # TP-MoE: expert weights have a leading E dim; trailing rules apply
+        pass
+    logical_tail = table.get(name)
+    if logical_tail is None:
+        return P()
+    spec = resolve(logical_tail)
+    if spec is None:
+        return P()
+    ndim = getattr(leaf, "ndim", len(getattr(leaf, "shape", ())))
+    pad = ndim - len(spec)
+    if pad < 0:  # leaf smaller than rule (e.g. unstacked scalar): replicate
+        return P()
+    return P(*([None] * pad + list(spec)))
+
+
+def param_pspecs(params, moe_impl: str = "tp"):
+    """PartitionSpec pytree for a parameter tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _leaf_spec(p, l, _PARAM_RULES, {"moe_impl": moe_impl},
+                                None), params)
+
+
+def cache_pspecs(cache, seq_sharded: bool = False):
+    """PartitionSpec pytree for a decode cache tree.
+
+    ``seq_sharded=True`` shards the KV cache sequence dim over the data axis
+    (long-context decode); requires the seq-sharded decode attention path.
+    """
+    def leaf(path, l):
+        table = dict(_CACHE_RULES)
+        if not seq_sharded:
+            table = {k: tuple(a if a != "seq_cache" else None for a in v)
+                     for k, v in table.items()}
+        else:
+            table = {k: tuple(a if a != "seq_cache" else "seq_shard"
+                              for a in v) for k, v in table.items()}
+        return _leaf_spec(path, l, table, {}, None)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+def opt_pspecs(param_specs, params, opt_name: str = "adamw"):
+    """Specs for optimizer state: master/m mirror the param specs (already
+    fully sharded via fsdp+tp); for the low-mem optimizer the factored
+    second moment drops the reduced dim; step is replicated."""
+    is_p = lambda x: isinstance(x, P)
+    ident = jax.tree.map(lambda s: s, param_specs, is_leaf=is_p)
+    out = {"master": ident, "m": ident, "step": P()}
+    if opt_name == "adamw":
+        out["v"] = ident
+        return out
+
+    def vspec(s, p):
+        ndim = getattr(p, "ndim", len(getattr(p, "shape", ())))
+        if ndim < 2:
+            return {"v": s}
+        full = [None] * (ndim - len(s)) + list(s)
+        return {"vr": P(*full[:-1]), "vc": P(*(full[:-2] + full[-1:]))}
+
+    out["v"] = jax.tree.map(vspec, param_specs, params, is_leaf=is_p)
+    return out
+
+
+def shardings_for(mesh, pspecs):
+    """Map a PartitionSpec pytree to NamedShardings on ``mesh``."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

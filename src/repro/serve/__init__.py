@@ -1,0 +1,3 @@
+"""Serving: batched decode engine."""
+
+from .engine import Request, ServeEngine

@@ -1,0 +1,93 @@
+"""Batched serving engine: continuous-batching decode over the cache.
+
+``ServeEngine`` keeps a fixed pool of ``max_batch`` sequence slots with a
+shared KV/state cache.  Requests join free slots (their prompt is prefilled
+token-by-token through ``decode_step`` at CPU-test scale; on hardware the
+prefill path runs ``forward`` + cache writes), then all active slots decode
+in lockstep one token per engine step -- the serving analogue of the
+paper's single-job HBD: one big ring, full bandwidth to every member.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, init_cache
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 16
+    out: Optional[List[int]] = None
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
+                 max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.cache = init_cache(params, cfg, max_batch, max_len)
+        self.positions = np.zeros((max_batch,), np.int32)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.pending_tok = np.zeros((max_batch,), np.int32)
+        self._step = jax.jit(
+            lambda c, t, p: decode_step(params, cfg, c, t, p))
+
+    # ------------------------------------------------------------- admit
+
+    def submit(self, req: Request) -> bool:
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                req.out = []
+                self.slots[i] = req
+                # prefill: feed prompt tokens through the decode path
+                for j, tok in enumerate(req.prompt):
+                    self.pending_tok[i] = tok
+                    self.positions[i] = j
+                    nxt, self.cache = self._step(
+                        self.cache,
+                        jnp.asarray(self.pending_tok)[:, None],
+                        jnp.asarray(self.positions))
+                self.pending_tok[i] = int(np.asarray(nxt)[i])
+                self.positions[i] = len(req.prompt)
+                req.out.append(int(self.pending_tok[i]))
+                return True
+        return False
+
+    # -------------------------------------------------------------- step
+
+    def step(self) -> int:
+        """One lockstep decode for all active slots; returns #active."""
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return 0
+        nxt, self.cache = self._step(
+            self.cache, jnp.asarray(self.pending_tok)[:, None],
+            jnp.asarray(self.positions))
+        nxt = np.asarray(nxt)
+        for i in active:
+            req = self.slots[i]
+            self.positions[i] += 1
+            self.pending_tok[i] = nxt[i]
+            req.out.append(int(nxt[i]))
+            if len(req.out) >= req.max_new or \
+                    self.positions[i] >= self.max_len - 1:
+                req.done = True
+                self.slots[i] = None
+        return len(active)
+
+    def run_until_done(self, max_steps: int = 512) -> None:
+        for _ in range(max_steps):
+            if self.step() == 0:
+                break

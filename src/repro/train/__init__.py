@@ -1,0 +1,5 @@
+"""Training runtime: loop, optimizer, checkpointing, elastic restart, data."""
+
+from . import checkpoint, data, elastic, loop, optimizer
+from .loop import TrainConfig, init_train_state, make_train_step, train_loop
+from .optimizer import OptConfig

@@ -1,0 +1,74 @@
+"""Deterministic, shardable synthetic data pipeline.
+
+Index-based sampling: batch ``i`` is a pure function of (seed, step), so any
+rank (or a restarted job) regenerates exactly its shard -- the property a
+real distributed loader must have for fault-tolerant restart.  A background
+prefetch thread keeps ``prefetch`` batches ready.
+
+The token stream is a mixture of Zipf-distributed unigrams and short
+repeated motifs, so models can actually reduce loss on it (integration tests
+assert loss decreases).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def synthetic_batch(cfg: ModelConfig, step: int, batch: int, seq: int,
+                    seed: int = 0) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed * 1_000_003 + step)
+    v = cfg.vocab_size
+    text = seq - cfg.prefix_len
+    # zipf unigrams + motif repeats => learnable structure
+    base = (rng.zipf(1.3, size=(batch, text + 1)) - 1) % v
+    motif = rng.integers(0, v, size=(batch, 8))
+    pos = rng.integers(0, max(text - 16, 1), size=(batch,))
+    for b in range(batch):
+        base[b, pos[b]:pos[b] + 8] = motif[b]
+        base[b, pos[b] + 8:pos[b] + 16] = motif[b]
+    toks = base[:, :-1].astype(np.int32)
+    labels = base[:, 1:].astype(np.int32)
+    out = {"tokens": toks, "labels": labels}
+    if cfg.is_encdec:
+        out["frames"] = rng.standard_normal(
+            (batch, cfg.enc_seq, cfg.d_model)).astype(np.float32) * 0.02
+    if cfg.prefix_len:
+        out["patches"] = rng.standard_normal(
+            (batch, cfg.prefix_len, cfg.d_model)).astype(np.float32) * 0.02
+    return out
+
+
+def data_iter(cfg: ModelConfig, batch: int, seq: int, seed: int = 0,
+              start_step: int = 0, prefetch: int = 2,
+              shardings=None) -> Iterator[Dict[str, jnp.ndarray]]:
+    """Prefetching iterator; ``start_step`` resumes mid-stream after
+    restart; ``shardings`` device_puts each batch for the active mesh."""
+    q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+    stop = threading.Event()
+
+    def producer():
+        step = start_step
+        while not stop.is_set():
+            q.put(synthetic_batch(cfg, step, batch, seq, seed))
+            step += 1
+
+    t = threading.Thread(target=producer, daemon=True)
+    t.start()
+    try:
+        while True:
+            host = q.get()
+            dev = {k: jnp.asarray(v) for k, v in host.items()}
+            if shardings is not None:
+                dev = jax.device_put(dev, shardings)
+            yield dev
+    finally:
+        stop.set()

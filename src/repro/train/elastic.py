@@ -1,0 +1,128 @@
+"""Elastic fault-tolerant training runtime.
+
+Wires the paper's control plane into the training loop:
+
+  1. ``ClusterManager`` watches for fault events (injected by tests or a
+     fault trace);
+  2. on a fault it re-runs the HBD-DCN orchestrator on the healthy
+     subgraph, yielding a new ``MeshPlan`` (possibly with a smaller DP
+     degree -- elastic scaling) and the OCSTrx settle time;
+  3. the runtime restores the latest checkpoint onto the new mesh
+     (``checkpoint.restore`` re-device_puts with the new shardings) and
+     resumes from the saved step with the deterministic data pipeline.
+
+Straggler mitigation rides the same path: ranks flagged by
+``ClusterManager.flag_stragglers`` are treated as faults at the next ring
+rebuild (the K-hop backup links make the swap a bypass, not a re-wiring).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional, Set
+
+import jax
+import numpy as np
+
+from repro.core.control_plane import ClusterManager
+from repro.core.placement import InsufficientCapacityError, MeshPlan, \
+    make_orchestrated_mesh
+from repro.train import checkpoint as ckpt
+
+
+@dataclasses.dataclass
+class ElasticConfig:
+    num_nodes: int
+    gpus_per_node: int = 4
+    k: int = 3
+    tp_size: int = 16
+    dp_size: int = 4
+    pod_size: int = 1
+    nodes_per_tor: int = 8
+    agg_domain: int = 64
+    checkpoint_every: int = 20
+    straggler_threshold: float = 1.5
+
+
+class ElasticRunner:
+    """Drives train steps under fault events.
+
+    ``build_step(mesh, plan, dp_size)`` must return (state, step_fn,
+    data_iter) for the given mesh -- the runner stays model-agnostic.
+    """
+
+    def __init__(self, cfg: ElasticConfig, ckpt_dir,
+                 build_step: Callable):
+        self.cfg = cfg
+        self.ckpt_dir = ckpt_dir
+        self.build_step = build_step
+        self.cm = ClusterManager(cfg.num_nodes, cfg.gpus_per_node, cfg.k,
+                                 cfg.nodes_per_tor, cfg.agg_domain)
+        self.events = []
+        self.step_times: Dict[int, float] = {}
+
+    def _build_mesh(self, plan: MeshPlan):
+        """Materialize the jax mesh when enough devices exist (production);
+        CPU-scale tests keep mesh=None -- the plan still drives placement."""
+        if len(jax.devices()) >= plan.device_grid.size:
+            return make_orchestrated_mesh(plan)
+        return None
+
+    def _mesh_for(self, dp_size: int):
+        ev = self.cm._replan(time.time(), (), "replan", self.cfg.tp_size,
+                             dp_size, self.cfg.pod_size)
+        plan = ev.plan
+        return self._build_mesh(plan), plan, ev
+
+    def run(self, total_steps: int,
+            fault_schedule: Optional[Dict[int, Set[int]]] = None,
+            repair_schedule: Optional[Dict[int, Set[int]]] = None):
+        """Run ``total_steps``, applying faults at the scheduled steps."""
+        # copy: events fire exactly once (a rollback past the fault step
+        # must not re-trigger the same fault)
+        fault_schedule = dict(fault_schedule or {})
+        repair_schedule = dict(repair_schedule or {})
+        dp = self.cfg.dp_size
+        mesh, plan, _ = self._mesh_for(dp)
+        state, step_fn, data = self.build_step(mesh, plan, dp)
+        saver = ckpt.AsyncCheckpointer(self.ckpt_dir)
+        step = 0
+        losses = []
+        while step < total_steps:
+            if step in repair_schedule:
+                self.cm.on_repair(time.time(), repair_schedule.pop(step),
+                                  self.cfg.tp_size, dp, self.cfg.pod_size)
+            if step in fault_schedule:
+                # 1) mark faults + reconfigure rings (control plane)
+                saver.wait()
+                try:
+                    ev = self.cm.on_fault(time.time(),
+                                          fault_schedule.pop(step),
+                                          self.cfg.tp_size, dp,
+                                          self.cfg.pod_size)
+                    new_dp = ev.plan.device_grid.shape[-2]
+                except InsufficientCapacityError:
+                    raise
+                self.events.append(("fault", step, ev.settle_s - ev.time_s))
+                # 2) rebuild mesh + restore from latest checkpoint
+                dp = new_dp
+                mesh = self._build_mesh(ev.plan)
+                state_like = state
+                state, step_fn, data = self.build_step(mesh, ev.plan, dp)
+                last = ckpt.latest_step(self.ckpt_dir)
+                if last is not None:
+                    state = ckpt.restore(self.ckpt_dir, state)
+                    step = last + 1
+
+            t0 = time.perf_counter()
+            batch = next(data)
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            self.step_times[step] = time.perf_counter() - t0
+            if (step + 1) % self.cfg.checkpoint_every == 0:
+                saver.save_async(state, step)
+            step += 1
+        saver.wait()
+        return state, losses

@@ -1,0 +1,128 @@
+"""Optimizers: AdamW and a memory-efficient variant (factored second moment
++ bf16 first moment) for models whose fp32 Adam states exceed HBM at the
+assigned mesh size (llama4-maverick-400B on 256 chips needs 6 bytes/param,
+not 12).
+
+States are sharded for ZeRO-1/FSDP by ``parallel.specs.opt_pspecs``: the
+same TP sharding as the parameter plus the data axis on the first replicated
+dim, so the update is computed shard-local and GSPMD re-gathers parameters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | adamw_lowmem
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+def init_opt_state(params, cfg: OptConfig) -> Dict[str, Any]:
+    if cfg.name == "adamw":
+        return {
+            "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+    if cfg.name == "adamw_lowmem":
+        # fp32 master + bf16 m + row/col-factored v (Adafactor-style)
+        def v_factored(p):
+            if p.ndim < 2:
+                return {"v": jnp.zeros_like(p, jnp.float32)}
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {
+            "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.bfloat16), params),
+            "v": jax.tree.map(v_factored, params,
+                              is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+            "step": jnp.zeros((), jnp.int32),
+        }
+    raise ValueError(cfg.name)
+
+
+def _lr_at(cfg: OptConfig, step) -> jnp.ndarray:
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def apply_updates(params, opt_state, grads, cfg: OptConfig):
+    """One optimizer step; returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"]
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+    lr = _lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** (step.astype(jnp.float32) + 1)
+    bc2 = 1.0 - b2 ** (step.astype(jnp.float32) + 1)
+
+    if cfg.name == "adamw":
+        def upd(p_master, g, m, v):
+            g = g.astype(jnp.float32) * clip
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+            newp = p_master - lr * (u + cfg.weight_decay * p_master)
+            return newp, m, v
+
+        flat = jax.tree.map(upd, opt_state["master"], grads,
+                            opt_state["m"], opt_state["v"])
+        master = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"master": master, "m": m, "v": v, "step": step + 1}
+    else:  # adamw_lowmem
+        def upd(p_master, g, m, vdict):
+            g = g.astype(jnp.float32) * clip
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            g2 = g * g
+            if "v" in vdict:
+                v = b2 * vdict["v"] + (1 - b2) * g2
+                vhat = v / bc2
+                newv = {"v": v}
+            else:
+                vr = b2 * vdict["vr"] + (1 - b2) * jnp.mean(g2, axis=-1)
+                vc = b2 * vdict["vc"] + (1 - b2) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+                vhat = (vr[..., None] * vc[..., None, :] / denom[..., None]) / bc2
+                newv = {"vr": vr, "vc": vc}
+            u = (m32 / bc1) / (jnp.sqrt(vhat) + cfg.eps)
+            newp = p_master - lr * (u + cfg.weight_decay * p_master)
+            return newp, m32.astype(jnp.bfloat16), newv
+
+        leaves_p, treedef = jax.tree.flatten(opt_state["master"])
+        leaves_g = treedef.flatten_up_to(grads)
+        leaves_m = treedef.flatten_up_to(opt_state["m"])
+        leaves_v = treedef.flatten_up_to(opt_state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(leaves_p, leaves_g, leaves_m, leaves_v)]
+        master = jax.tree.unflatten(treedef, [o[0] for o in out])
+        m = jax.tree.unflatten(treedef, [o[1] for o in out])
+        v = jax.tree.unflatten(treedef, [o[2] for o in out])
+        new_state = {"master": master, "m": m, "v": v, "step": step + 1}
+
+    new_params = jax.tree.map(
+        lambda mast, p: mast.astype(p.dtype), master, params)
+    return new_params, new_state, {"grad_norm": gn, "lr": lr}

@@ -1,0 +1,127 @@
+"""Fault-resilience models, trace generation, cost model, MFU simulator."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import (ALL_BOMS, INFINITEHBD_K2, NVL72, TPUV4,
+                                   cost_ratio, table6)
+from repro.core.fault_sim import theoretical_waste_bound, waste_over_trace
+from repro.core.hbd_models import (BigSwitch, InfiniteHBDModel, NVLModel,
+                                   SiPRingModel, TPUv4Model, default_suite)
+from repro.core.mfu_sim import (Cluster, GPT_MOE_1T, LLAMA31_405B, search)
+from repro.core.trace import generate_trace, to_4gpu_trace
+
+
+# ------------------------------------------------------------- cost model
+
+def test_table6_exact():
+    """BOM arithmetic reproduces the paper's Table 6 to the cent."""
+    rows = {r["architecture"]: r for r in table6()}
+    assert rows["tpuv4"]["per_gpu_cost"] == 1567.20
+    assert rows["nvl-36"]["per_gpu_cost"] == 9563.20
+    assert rows["nvl-72"]["per_gpu_cost"] == 9563.20
+    assert rows["nvl-36x2"]["per_gpu_cost"] == 17924.00
+    assert rows["nvl-576"]["per_gpu_cost"] == 30417.60
+    assert rows["infinitehbd-k2"]["per_gpu_cost"] == 2626.80
+    assert rows["infinitehbd-k3"]["per_gpu_cost"] == 3740.60
+    assert rows["infinitehbd-k2"]["per_gbps_cost"] == 3.28
+    assert rows["tpuv4"]["per_gbps_cost"] == 5.22
+
+
+def test_headline_cost_ratios():
+    """Paper: K=2 is 30.86% of NVL-36/72 and 62.84% of TPUv4 per GBps."""
+    assert abs(cost_ratio(INFINITEHBD_K2, NVL72) - 0.3086) < 0.002
+    assert abs(cost_ratio(INFINITEHBD_K2, TPUV4) - 0.6284) < 0.002
+
+
+# ------------------------------------------------------------- waste models
+
+@given(st.sets(st.integers(0, 719), max_size=40), st.sampled_from([8, 16, 32, 64]))
+@settings(max_examples=40, deadline=None)
+def test_waste_invariants(faults, tp):
+    for model in default_suite(720, 4):
+        r = model.evaluate(faults, tp)
+        assert 0 <= r.placed_gpus <= r.healthy_gpus
+        assert r.placed_gpus % tp == 0
+        assert 0.0 <= r.waste_ratio <= 1.0
+
+
+@given(st.sets(st.integers(0, 719), max_size=30))
+@settings(max_examples=40, deadline=None)
+def test_bigswitch_is_lower_bound(faults):
+    bs = BigSwitch(720, 4)
+    for model in default_suite(720, 4):
+        assert model.evaluate(faults, 32).placed_gpus <= \
+            bs.evaluate(faults, 32).placed_gpus
+
+
+@given(st.sets(st.integers(0, 719), max_size=30))
+@settings(max_examples=40, deadline=None)
+def test_higher_k_never_worse(faults):
+    k2 = InfiniteHBDModel(720, 4, k=2).evaluate(faults, 32)
+    k3 = InfiniteHBDModel(720, 4, k=3).evaluate(faults, 32)
+    assert k3.placed_gpus >= k2.placed_gpus
+
+
+def test_paper_headline_waste_numbers():
+    """TP-32 over the production-like trace (paper: InfHBD 0.53%,
+    NVL-72 10.04%, TPUv4 7.56%) -- we assert the same ordering and
+    magnitude bands."""
+    tr4 = to_4gpu_trace(generate_trace(400, seed=1))
+    inf = waste_over_trace(InfiniteHBDModel(720, 4, k=3), tr4, 32, 100)
+    nvl = waste_over_trace(NVLModel(720, 4, hbd_gpus=72), tr4, 32, 100)
+    tpu = waste_over_trace(TPUv4Model(720, 4), tr4, 32, 100)
+    assert inf.mean_waste < 0.01          # near-zero
+    assert 0.08 < nvl.mean_waste < 0.13   # ~10%
+    assert 0.05 < tpu.mean_waste < 0.10   # ~7.5%
+    assert inf.mean_waste < tpu.mean_waste < nvl.mean_waste
+
+
+def test_appendix_c_bound():
+    b = theoretical_waste_bound(32, 4, 3, 0.0367)
+    assert abs(b - 2 * 28 * 0.0367 ** 3) < 1e-9
+
+
+def test_trace_statistics():
+    tr = generate_trace(400, seed=0)
+    assert abs(tr.mean_fault_ratio(200) - 0.0233) < 0.006
+    tr4 = to_4gpu_trace(tr)
+    assert abs(tr4.mean_fault_ratio(200) - 0.0117) < 0.004
+    assert tr4.num_nodes == 800
+
+
+# ------------------------------------------------------------- MFU sim
+
+def test_optimal_tp_grows_with_cluster():
+    tps = []
+    for n in (1024, 16384, 131072):
+        r = search(LLAMA31_405B, Cluster(n))
+        tps.append(r.plan.tp)
+    assert tps == sorted(tps)
+    assert tps[-1] >= 64
+
+
+def test_tp8_cap_hurts_at_scale():
+    """Paper Table 2: unconstrained/TP-8 MFU ratio ~3.37x at 131072 GPUs."""
+    r = search(LLAMA31_405B, Cluster(131072))
+    r8 = search(LLAMA31_405B, Cluster(131072, max_tp=8))
+    assert r.mfu / r8.mfu > 3.0
+
+
+def test_moe_ep1_optimal_under_imbalance():
+    """Paper Table 5: with 20% expert imbalance the best EP degree is 1."""
+    best = search(GPT_MOE_1T, Cluster(4096), global_batch=1536,
+                  eps=(1, 2, 4, 8), imbalance=0.2, vpp=3)
+    assert best.plan.ep == 1
+
+
+def test_ep_beats_tp_only_when_balanced():
+    """Paper Table 4 crossover."""
+    tp = search(GPT_MOE_1T, Cluster(4096), global_batch=1536, eps=(1,),
+                imbalance=0.0, vpp=3)
+    ep0 = search(GPT_MOE_1T, Cluster(4096), global_batch=1536, eps=(8,),
+                 imbalance=0.0, vpp=3)
+    ep20 = search(GPT_MOE_1T, Cluster(4096), global_batch=1536, eps=(8,),
+                  imbalance=0.2, vpp=3)
+    assert ep0.mfu > tp.mfu > ep20.mfu

@@ -1,0 +1,89 @@
+"""End-to-end behaviour: training converges, serving decodes, the elastic
+runtime survives injected faults and the control plane re-forms rings."""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.control_plane import ClusterManager
+from repro.core.placement import ring_adjacency_ok
+from repro.models import init_params
+from repro.serve.engine import Request, ServeEngine
+from repro.train.data import data_iter
+from repro.train.loop import TrainConfig, init_train_state, make_train_step
+from repro.train.optimizer import OptConfig
+from repro.train import checkpoint as ckpt
+
+
+def test_end_to_end_train_and_serve():
+    """Train a tiny model until loss visibly drops, then serve it."""
+    cfg = get_arch("starcoder2-3b").reduced()
+    tcfg = TrainConfig(opt=OptConfig(lr=3e-3, warmup_steps=5))
+    state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, tcfg))
+    data = data_iter(cfg, batch=8, seq=64)
+    losses = []
+    for _ in range(20):
+        state, metrics = step(state, next(data))
+        losses.append(float(metrics["loss"]))
+    assert np.mean(losses[-4:]) < np.mean(losses[:4])
+
+    eng = ServeEngine(cfg, state["params"], max_batch=2, max_len=64)
+    reqs = [Request(i, [1, 2, 3, 4], max_new=6) for i in range(3)]
+    pending = list(reqs)
+    for _ in range(100):
+        while pending and eng.submit(pending[0]):
+            pending.pop(0)
+        if eng.step() == 0 and not pending:
+            break
+    assert all(r.done and len(r.out) >= 6 for r in reqs)
+
+
+def test_control_plane_fault_cycle():
+    """Fault -> replan (smaller or equal capacity) -> repair -> recover."""
+    cm = ClusterManager(128, 4, k=3)
+    ev1 = cm.on_fault(0.0, {10, 11}, tp_size=16, dp_size=28, pod_size=1)
+    assert ev1.plan is not None
+    assert ring_adjacency_ok(ev1.plan, 3, 4)
+    assert 0 < ev1.settle_s - ev1.time_s < 0.01   # sub-10ms reconfiguration
+    ev2 = cm.on_repair(100.0, {10, 11}, tp_size=16, dp_size=28, pod_size=1)
+    assert len(ev2.plan.placement) == 28
+
+
+def test_elastic_restart_resumes_from_checkpoint():
+    """Injected fault mid-run: runtime replans, restores, finishes."""
+    from repro.train.elastic import ElasticConfig, ElasticRunner
+
+    cfg = get_arch("h2o-danube-1.8b").reduced()
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=2))
+
+    def build_step(mesh, plan, dp):
+        # CPU-scale: the mesh plan decides placement; compute runs locally
+        state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, tcfg))
+        data = data_iter(cfg, batch=4, seq=32)
+        return state, step, data
+
+    with tempfile.TemporaryDirectory() as d:
+        ecfg = ElasticConfig(num_nodes=64, gpus_per_node=4, tp_size=16,
+                             dp_size=14, checkpoint_every=5)
+        runner = ElasticRunner(ecfg, d, build_step)
+        state, losses = runner.run(
+            total_steps=18, fault_schedule={9: {3, 4}})
+        assert len([e for e in runner.events if e[0] == "fault"]) == 1
+        # reconfiguration settle time recorded and tiny (OCSTrx ~80us + sw)
+        assert runner.events[0][2] < 0.01
+        assert len(losses) >= 18
+        assert ckpt.latest_step(d) is not None
+
+
+def test_straggler_flagging():
+    cm = ClusterManager(32, 4)
+    times = {i: 1.0 for i in range(32)}
+    times[7] = 2.5
+    flagged = cm.flag_stragglers(times, threshold=1.5)
+    assert flagged == {7}

@@ -1,0 +1,128 @@
+"""Topology + orchestrator invariants (unit + hypothesis property tests)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.orchestrator import (cross_tor_traffic, deployment_strategy,
+                                     greedy_baseline, healthy_components,
+                                     orchestrate_dcn_free,
+                                     orchestrate_fat_tree, placement_fat_tree)
+from repro.core.placement import (InsufficientCapacityError, plan_mesh,
+                                  ring_adjacency_ok)
+from repro.core.topology import KHopRingTopology, TopologyConfig
+
+
+class TestKHopRing:
+    def test_components_bridge_small_gaps(self):
+        topo = KHopRingTopology(TopologyConfig(32, 4, 3, closed_ring=False))
+        topo.inject_faults([5, 6])           # gap of 2 < K=3: bridged
+        assert len(topo.healthy_components()) == 1
+
+    def test_components_split_large_gaps(self):
+        topo = KHopRingTopology(TopologyConfig(32, 4, 3, closed_ring=False))
+        topo.inject_faults([5, 6, 7])        # gap of 3 == K: split
+        assert len(topo.healthy_components()) == 2
+
+    def test_gpu_ring_is_boustrophedon(self):
+        topo = KHopRingTopology(TopologyConfig(8, 4, 2))
+        ring = topo.gpu_ring([0, 1, 2])
+        assert len(ring) == 12
+        # every consecutive pair co-located or adjacent nodes
+        for (u, _), (v, _) in zip(ring, ring[1:] + ring[:1]):
+            assert u == v or abs(u - v) <= 2
+
+    def test_activate_segment_settles_fast(self):
+        topo = KHopRingTopology(TopologyConfig(16, 4, 3))
+        settle = topo.activate_segment([0, 1, 3, 4])   # bypasses node 2
+        assert 0 < settle <= 100.0                      # within 100us
+
+    def test_bypass_beyond_k_rejected(self):
+        topo = KHopRingTopology(TopologyConfig(16, 4, 2))
+        with pytest.raises(ValueError):
+            topo.bypass_plan([0, 3])                    # 3 hops > K=2
+
+    @given(st.integers(8, 64), st.sets(st.integers(0, 63), max_size=10),
+           st.integers(1, 4))
+    @settings(max_examples=50, deadline=None)
+    def test_waste_report_invariants(self, n, faults, k):
+        faults = {f for f in faults if f < n}
+        topo = KHopRingTopology(TopologyConfig(n, 4, k, closed_ring=False))
+        topo.inject_faults(faults)
+        rep = topo.waste_report(tp_nodes=4)
+        assert 0 <= rep["wasted_gpus"] <= rep["total_gpus"]
+        assert rep["placed_gpus"] % 16 == 0
+        assert rep["placed_gpus"] + rep["wasted_gpus"] + rep["faulty_gpus"] \
+            == rep["total_gpus"]
+
+
+class TestOrchestrator:
+    @given(st.integers(16, 128), st.sets(st.integers(0, 127), max_size=20),
+           st.integers(1, 8), st.integers(1, 4))
+    @settings(max_examples=60, deadline=None)
+    def test_dcn_free_groups_are_valid_rings(self, n, faults, m, k):
+        faults = {f for f in faults if f < n}
+        placement = orchestrate_dcn_free(list(range(n)), faults, m, k)
+        for grp in placement:
+            assert len(grp) == m
+            assert not (set(grp) & faults)
+            for u, v in zip(grp, grp[1:]):
+                assert 0 < v - u <= k     # consecutive within K hops
+        # no node reused
+        used = [u for g in placement for u in g]
+        assert len(used) == len(set(used))
+
+    def test_deployment_order_is_permutation(self):
+        dep = deployment_strategy(128, 8)
+        assert sorted(dep.order) == list(range(128))
+        # adjacent nodes in a sub-line are p apart physically
+        for sub in dep.sublines:
+            for u, v in zip(sub, sub[1:]):
+                assert v - u == 8
+
+    def test_fat_tree_beats_greedy_on_cross_tor(self):
+        faults = {3, 40, 77}
+        opt = orchestrate_fat_tree(256, 4, 8, faults, tp_size=16,
+                                   job_gpus=192 * 4, agg_domain=64, k=3)
+        base = greedy_baseline(256, 4, faults, 16, 192 * 4, k=3,
+                               order=deployment_strategy(256, 8).order)
+        c_opt = cross_tor_traffic(opt, 8)
+        c_base = cross_tor_traffic(base, 8)
+        assert c_opt["dp_cross_share"] < c_base["dp_cross_share"]
+        assert c_opt["cross_tor_share"] < 0.05
+
+    @given(st.sets(st.integers(0, 255), max_size=24), st.integers(0, 20))
+    @settings(max_examples=30, deadline=None)
+    def test_binary_search_monotone_feasible(self, faults, n_constraints):
+        dep = deployment_strategy(256, 8)
+        m = 4
+        a = placement_fat_tree(dep, n_constraints, faults, m, 64, 3)
+        for grp in a:
+            assert len(grp) == m and not (set(grp) & faults)
+        used = [u for g in a for u in g]
+        assert len(used) == len(set(used))
+
+
+class TestMeshPlan:
+    def test_plan_and_adjacency(self):
+        plan = plan_mesh(128, 4, tp_size=16, dp_size=14, pod_size=2,
+                         faults={3, 77}, k=3)
+        assert plan.device_grid.shape == (2, 14, 16)
+        assert ring_adjacency_ok(plan, 3, 4)
+        # device ids unique and within range
+        flat = plan.device_grid.reshape(-1)
+        assert len(set(flat.tolist())) == flat.size
+        assert flat.max() < 512
+
+    def test_insufficient_capacity_raises(self):
+        with pytest.raises(InsufficientCapacityError):
+            plan_mesh(128, 4, tp_size=16, dp_size=16, pod_size=2,
+                      faults={1, 2, 3}, k=3)
+
+    def test_orchestrated_beats_baseline_traffic(self):
+        p_orch = plan_mesh(256, 4, 16, 16, 2, faults={9}, k=3)
+        p_base = plan_mesh(256, 4, 16, 16, 2, faults={9}, k=3,
+                           orchestrated=False)
+        assert p_orch.cross_tor["dp_cross_share"] <= \
+            p_base.cross_tor["dp_cross_share"]
