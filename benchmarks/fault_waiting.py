@@ -1,23 +1,38 @@
-"""Paper Fig 16/23: job fault-waiting time share under various job scales."""
+"""Paper Fig 16/23: job fault-waiting time share under various job scales.
+
+One batched grid evaluation covers every (architecture, TP, job-scale)
+combination; the waiting share is a threshold reduction over the grid.
+"""
 
 from __future__ import annotations
 
-from repro.core.fault_sim import fault_waiting_time
-from repro.core.hbd_models import default_suite
-from repro.core.trace import generate_trace, to_4gpu_trace
+from repro.sim import ScenarioSpec, TraceSnapshots, fault_waiting_table, run_sweep
 
 from .common import row, timed
 
+JOB_FRACTIONS = (0.85, 0.92)
 
-def run():
-    tr4 = to_4gpu_trace(generate_trace(400, seed=1))
-    for tp in (16, 32):
-        for frac in (0.85, 0.92):
-            job = int(2880 * frac) // tp * tp
-            for model in default_suite(720, 4):
-                w, us = timed(fault_waiting_time, model, tr4, tp, job, 150)
-                row(f"fault_wait/tp{tp}/job{frac}/{model.name}", us,
-                    round(w, 4))
+
+def run(smoke: bool = False):
+    samples = 40 if smoke else 150
+    spec = ScenarioSpec(num_nodes=720,
+                        snapshots=TraceSnapshots(trace_nodes=400,
+                                                 samples=samples, seed=1),
+                        tp_sizes=(16, 32))
+    masks = spec.snapshots.masks(spec.num_nodes)   # untimed, as in the seed
+    result, us = timed(run_sweep, spec, masks=masks, models=spec.models())
+    per_cell = us / max(1, len(result.names) * len(result.tp_sizes))
+    job_of = {(int(tp), frac): int(2880 * frac) // int(tp) * int(tp)
+              for tp in result.tp_sizes for frac in JOB_FRACTIONS}
+    table = {(r["architecture"], r["tp_size"], r["job_gpus"]):
+             r["waiting_share"]
+             for r in fault_waiting_table(result, sorted(set(job_of.values())))}
+    for tp in result.tp_sizes:
+        for frac in JOB_FRACTIONS:
+            for name in result.names:
+                share = table[(name, int(tp), job_of[(int(tp), frac)])]
+                row(f"fault_wait/tp{tp}/job{frac}/{name}", per_cell,
+                    round(share, 4))
 
 
 if __name__ == "__main__":

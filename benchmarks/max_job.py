@@ -1,21 +1,29 @@
-"""Paper Fig 15: maximal job scale supported by a 2,880-GPU cluster."""
+"""Paper Fig 15: maximal job scale supported by a 2,880-GPU cluster.
+
+Runs on the batched scenario engine: one grid evaluation yields the P5
+placeable capacity for every (architecture, TP) pair at once.
+"""
 
 from __future__ import annotations
 
-from repro.core.fault_sim import max_job_scale
-from repro.core.hbd_models import default_suite
-from repro.core.trace import generate_trace, to_4gpu_trace
+from repro.sim import ScenarioSpec, TraceSnapshots, max_job_table, run_sweep
 
 from .common import row, timed
 
 
-def run():
-    tr4 = to_4gpu_trace(generate_trace(400, seed=1))
-    for tp in (16, 32, 64):
-        for model in default_suite(720, 4):   # 2880 GPUs as in the paper
-            cap, us = timed(max_job_scale, model, tr4, tp, 120)
-            row(f"max_job/tp{tp}/{model.name}", us,
-                {"gpus": int(cap), "fraction": round(cap / 2880, 4)})
+def run(smoke: bool = False):
+    samples = 40 if smoke else 120
+    spec = ScenarioSpec(num_nodes=720,     # 2880 GPUs as in the paper
+                        snapshots=TraceSnapshots(trace_nodes=400,
+                                                 samples=samples, seed=1),
+                        tp_sizes=(16, 32, 64))
+    masks = spec.snapshots.masks(spec.num_nodes)   # untimed, as in the seed
+    result, us = timed(run_sweep, spec, masks=masks, models=spec.models())
+    per_cell = us / max(1, len(result.names) * len(result.tp_sizes))
+    for r in max_job_table(result):
+        row(f"max_job/tp{r['tp_size']}/{r['architecture']}", per_cell,
+            {"gpus": int(r["max_job_gpus"]),
+             "fraction": round(r["max_job_gpus"] / 2880, 4)})
 
 
 if __name__ == "__main__":

@@ -8,10 +8,14 @@ one the MFU simulator uses) for TP-32 on a Llama-70B-class model.
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
-from repro.core.orchestrator import (cross_tor_traffic, deployment_strategy,
-                                     greedy_baseline, orchestrate_fat_tree)
+from repro.core.orchestrator import (IncrementalOrchestrator,
+                                     cross_tor_traffic, deployment_strategy,
+                                     greedy_baseline, orchestrate_dcn_free,
+                                     orchestrate_fat_tree)
 from repro.core.trace import iid_fault_sets
 
 from .common import row, timed
@@ -33,12 +37,57 @@ def _cross(num_nodes, faults, job_gpus, orchestrated, seed=0):
     return cross_tor_traffic(pl, 8, DP_BYTES, TP_BYTES)
 
 
-def run():
-    n_nodes = 2048                      # 8192 GPUs as in §6.4
+def _incremental_vs_full(n_nodes: int, n_events: int, m: int = 8,
+                         k: int = 3, seed: int = 0):
+    """Time a fault/repair event sequence: full re-orchestration per event
+    vs the delta-updated IncrementalOrchestrator (same placements)."""
+    rng = np.random.default_rng(seed)
+    order = list(deployment_strategy(n_nodes, 8).order)
+    events = []
+    faulty: set = set()
+    for _ in range(n_events):
+        if faulty and rng.random() < 0.45:
+            u = int(sorted(faulty)[rng.integers(len(faulty))])
+            faulty.discard(u)
+            events.append(("repair", u))
+        else:
+            u = int(rng.integers(n_nodes))
+            if u in faulty:
+                continue
+            faulty.add(u)
+            events.append(("fault", u))
+
+    t0 = time.perf_counter()
+    faults: set = set()
+    for kind, u in events:
+        faults.add(u) if kind == "fault" else faults.discard(u)
+        full = orchestrate_dcn_free(order, faults, m, k)
+    full_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    inc = IncrementalOrchestrator(order, m, k)
+    for kind, u in events:
+        inc.fault(u) if kind == "fault" else inc.repair(u)
+    inc_s = time.perf_counter() - t0
+    assert inc.placement() == full, "incremental diverged from full path"
+    return full_s, inc_s, len(events)   # duplicate draws were skipped
+
+
+def run(smoke: bool = False):
+    n_nodes = 512 if smoke else 2048    # 8192 GPUs as in §6.4
+    # Incremental control-plane path: delta updates vs full re-orchestration
+    ev_nodes = 1024 if smoke else 8192
+    n_events = 100 if smoke else 400
+    full_s, inc_s, n_ran = _incremental_vs_full(ev_nodes, n_events)
+    row(f"incremental/nodes{ev_nodes}/events{n_ran}", inc_s * 1e6,
+        {"full_us_per_event": round(full_s / n_ran * 1e6, 1),
+         "inc_us_per_event": round(inc_s / n_ran * 1e6, 1),
+         "speedup": round(full_s / inc_s, 1)})
     # Fig 17b: job-scale sweep at 5% faults
+    n_gpus = n_nodes * 4
     faults = next(iid_fault_sets(n_nodes, 0.05, 1, seed=3))
-    for frac in (0.5, 0.7, 0.85, 0.9):
-        job = int(8192 * frac) // 32 * 32
+    for frac in ((0.5, 0.85) if smoke else (0.5, 0.7, 0.85, 0.9)):
+        job = int(n_gpus * frac) // 32 * 32
         for name, orch in (("optimized", True), ("baseline", False)):
             c, us = timed(_cross, n_nodes, faults, job, orch)
             if c is None:
@@ -48,8 +97,8 @@ def run():
                     {"cross_tor": round(c["cross_tor_share"], 4),
                      "dp_cross": round(c["dp_cross_share"], 4)})
     # Fig 17c: fault sweep at 85% job scale
-    job = int(8192 * 0.85) // 32 * 32
-    for fr in (0.0, 0.03, 0.05, 0.07, 0.10):
+    job = int(n_gpus * 0.85) // 32 * 32
+    for fr in ((0.0, 0.05) if smoke else (0.0, 0.03, 0.05, 0.07, 0.10)):
         faults = next(iid_fault_sets(n_nodes, fr, 1, seed=5))
         for name, orch in (("optimized", True), ("baseline", False)):
             c, us = timed(_cross, n_nodes, faults, job, orch)
@@ -57,7 +106,7 @@ def run():
                    {"cross_tor": round(c["cross_tor_share"], 4)})
             row(f"fig17c/{name}/fault{fr:.2f}", us, val)
     # Fig 17a: cluster-size insensitivity
-    for nn in (512, 1024, 2048):
+    for nn in ((256, 512) if smoke else (512, 1024, 2048)):
         faults = next(iid_fault_sets(nn, 0.05, 1, seed=7))
         job = int(nn * 4 * 0.85) // 32 * 32
         c, us = timed(_cross, nn, faults, job, True)

@@ -1,29 +1,42 @@
 """Benchmark driver: one section per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [section ...]
+  PYTHONPATH=src python -m benchmarks.run [--smoke] [section ...]
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows.  ``--smoke`` asks each section
+for a shrunken grid (CI-sized: seconds, not minutes); sections that predate
+the flag run unchanged.
 """
 
 from __future__ import annotations
 
+import inspect
 import sys
 import traceback
 
-SECTIONS = ("waste_ratio", "max_job", "fault_waiting", "mfu_tables",
+SECTIONS = ("waste_ratio", "max_job", "fault_waiting", "sweep", "mfu_tables",
             "orchestration", "cost", "collectives_bench", "kernels_bench",
             "roofline")
 
 
 def main() -> None:
-    want = sys.argv[1:] or list(SECTIONS)
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    unknown = [a for a in args if a.startswith("--") and a != "--smoke"]
+    if unknown:
+        print(f"unknown flag(s): {' '.join(unknown)} (supported: --smoke)",
+              file=sys.stderr)
+        sys.exit(2)
+    want = [a for a in args if not a.startswith("--")] or list(SECTIONS)
     print("name,us_per_call,derived")
     failed = []
     for name in want:
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            print(f"# --- {name} ---")
-            mod.run()
+            print(f"# --- {name}{' (smoke)' if smoke else ''} ---")
+            if "smoke" in inspect.signature(mod.run).parameters:
+                mod.run(smoke=smoke)
+            else:
+                mod.run()
         except Exception as e:  # noqa: BLE001 - report and continue
             failed.append(name)
             print(f"# {name} FAILED: {type(e).__name__}: {e}")

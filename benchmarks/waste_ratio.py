@@ -3,37 +3,58 @@
 Reproduces: InfiniteHBD near-zero (paper 0.53% @ TP-32), NVL-72 ~10.04%,
 TPUv4 ~7.56% on the production-like trace, plus the Fig-14 fault-ratio
 sweep and the Appendix-C theoretical upper bound (Table 7).
+
+Runs on the batched scenario engine (``repro.sim``): one vectorized
+(snapshot x architecture x TP) grid instead of per-snapshot Python loops.
+``--smoke`` shrinks the grid for CI.
 """
 
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core.fault_sim import (theoretical_waste_bound, waste_over_trace,
-                                  waste_vs_fault_ratio)
-from repro.core.hbd_models import default_suite
-from repro.core.trace import generate_trace, to_4gpu_trace
+from repro.core.fault_sim import theoretical_waste_bound
+from repro.sim import (IIDSnapshots, ScenarioSpec, TraceSnapshots, run_sweep,
+                       waste_table)
 
 from .common import row, timed
 
+PAPER_TP32 = {"infinitehbd-k3": 0.0053, "nvl-72": 0.1004, "tpuv4": 0.0756}
 
-def run():
-    tr4 = to_4gpu_trace(generate_trace(400, seed=1))
-    paper = {"infinitehbd-k3": 0.0053, "nvl-72": 0.1004, "tpuv4": 0.0756}
-    for tp in (16, 32, 64):
-        for model in default_suite(720, 4):
-            st, us = timed(waste_over_trace, model, tr4, tp, 150)
-            ref = paper.get(model.name) if tp == 32 else None
-            row(f"waste_trace/tp{tp}/{model.name}", us,
-                {"mean": round(st.mean_waste, 4),
-                 "p99": round(st.p99_waste, 4),
-                 **({"paper": ref} if ref else {})})
+
+def run(smoke: bool = False):
+    samples = 40 if smoke else 150
+    spec = ScenarioSpec(num_nodes=720,
+                        snapshots=TraceSnapshots(trace_nodes=400,
+                                                 samples=samples, seed=1),
+                        tp_sizes=(16, 32, 64))
+    # trace generation stays outside the timing, as in the seed benchmarks;
+    # the timed region is the vectorized grid evaluation itself
+    masks = spec.snapshots.masks(spec.num_nodes)
+    result, us = timed(run_sweep, spec, masks=masks, models=spec.models())
+    per_cell = us / max(1, len(result.names) * len(result.tp_sizes))
+    for r in waste_table(result):
+        ref = PAPER_TP32.get(r["architecture"]) if r["tp_size"] == 32 else None
+        row(f"waste_trace/tp{r['tp_size']}/{r['architecture']}", per_cell,
+            {"mean": round(r["mean_waste"], 4),
+             "p99": round(r["p99_waste"], 4),
+             **({"paper": ref} if ref else {})})
+
     # Fig 14: waste vs node fault ratio at TP-32
-    ratios = [0.01, 0.03, 0.05, 0.08, 0.12]
-    for model in default_suite(720, 4):
-        vals, us = timed(waste_vs_fault_ratio, model, 32, ratios, 10)
-        row(f"waste_vs_fault/tp32/{model.name}", us,
-            {f"{r:.2f}": round(v, 4) for r, v in zip(ratios, vals)})
+    ratios = [0.01, 0.03, 0.05] if smoke else [0.01, 0.03, 0.05, 0.08, 0.12]
+    sweeps = {}
+    total_us = 0.0
+    for fr in ratios:
+        spec = ScenarioSpec(num_nodes=720,
+                            snapshots=IIDSnapshots(fr, samples=10, seed=0),
+                            tp_sizes=(32,))
+        res, us = timed(run_sweep, spec)
+        total_us += us
+        for r in waste_table(res):
+            sweeps.setdefault(r["architecture"], {})[f"{fr:.2f}"] = \
+                round(r["mean_waste"], 4)
+    per_arch = total_us / max(1, len(sweeps))   # whole-sweep share per model
+    for name, vals in sweeps.items():
+        row(f"waste_vs_fault/tp32/{name}", per_arch, vals)
+
     # Table 7 bound
     for r_gpus, ps in ((4, 0.0367), (8, 0.0722)):
         for k in (2, 3, 4):

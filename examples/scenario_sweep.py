@@ -1,0 +1,70 @@
+"""Datacenter-scale what-if sweeps with the batched scenario engine.
+
+Three escalating scenarios:
+
+  1. the paper's 2,880-GPU trace comparison (Figs 13/15) in one grid call,
+  2. a 100k-GPU what-if at the same fault statistics,
+  3. an incremental control-plane episode: stream fault/repair events
+     through the delta-updated orchestrator and watch capacity move.
+
+Run:  PYTHONPATH=src python examples/scenario_sweep.py
+"""
+
+import numpy as np
+
+from repro.core.orchestrator import IncrementalOrchestrator, deployment_strategy
+from repro.sim import (ScenarioSpec, TraceSnapshots, max_job_table, run_sweep,
+                       waste_table)
+
+
+def paper_scale():
+    print("== 2,880-GPU trace sweep (paper §6.2) ==")
+    spec = ScenarioSpec(num_nodes=720,
+                        snapshots=TraceSnapshots(trace_nodes=400, samples=200),
+                        tp_sizes=(16, 32, 64))
+    result = run_sweep(spec)
+    for r in waste_table(result):
+        if r["tp_size"] == 32:
+            print(f"  tp32 {r['architecture']:<16} mean_waste="
+                  f"{r['mean_waste']:.4f}  p99={r['p99_waste']:.4f}")
+
+
+def datacenter_scale():
+    print("== 100k-GPU what-if (25,000 nodes, 500 snapshots) ==")
+    spec = ScenarioSpec(num_nodes=25_000,
+                        snapshots=TraceSnapshots(trace_nodes=12_500,
+                                                 samples=500),
+                        tp_sizes=(32,),
+                        architectures=("big-switch", "infinitehbd-k3",
+                                       "nvl-72", "tpuv4"))
+    result = run_sweep(spec)
+    for r in max_job_table(result):
+        print(f"  tp32 {r['architecture']:<16} P5 placeable = "
+              f"{int(r['max_job_gpus']):>6} GPUs ({r['fraction']:.1%})")
+
+
+def control_plane_episode():
+    print("== incremental orchestration episode (4,096 nodes, TP-32) ==")
+    n, m, k = 4096, 8, 3
+    order = list(deployment_strategy(n, nodes_per_tor=8).order)
+    inc = IncrementalOrchestrator(order, m, k)
+    rng = np.random.default_rng(7)
+    faulty = []
+    for step in range(8):
+        if faulty and rng.random() < 0.4:
+            u = faulty.pop(int(rng.integers(len(faulty))))
+            inc.repair(u)
+            what = f"repair node {u}"
+        else:
+            u = int(rng.integers(n))
+            faulty.append(u)
+            inc.fault(u)
+            what = f"fault  node {u}"
+        print(f"  t{step}: {what:<18} -> {inc.capacity_groups()} TP groups "
+              f"({inc.capacity_nodes() * 4} GPUs placeable)")
+
+
+if __name__ == "__main__":
+    paper_scale()
+    datacenter_scale()
+    control_plane_episode()

@@ -2,19 +2,23 @@
 
 from .ocstrx import OCSTrx, OCSTrxBundle, Path
 from .topology import KHopRingTopology, TopologyConfig
-from .orchestrator import (Placement, cross_tor_traffic, deployment_strategy,
+from .orchestrator import (IncrementalOrchestrator, Placement,
+                           cross_tor_traffic, deployment_strategy,
                            greedy_baseline, healthy_components,
                            orchestrate_dcn_free, orchestrate_fat_tree,
                            placement_fat_tree)
 from .placement import (InsufficientCapacityError, MeshPlan,
                         make_orchestrated_mesh, plan_mesh, ring_adjacency_ok)
-from .hbd_models import (BigSwitch, HBDModel, InfiniteHBDModel, NVLModel,
-                         SiPRingModel, TPUv4Model, WasteResult, default_suite)
-from .fault_sim import (fault_waiting_time, max_job_scale,
-                        theoretical_waste_bound, waste_over_trace,
-                        waste_vs_fault_ratio)
-from .trace import (FaultEvent, FaultTrace, generate_trace, iid_fault_sets,
-                    to_4gpu_trace)
+from .hbd_models import (BatchedWasteResult, BigSwitch, HBDModel,
+                         InfiniteHBDModel, NVLModel, SiPRingModel, TPUv4Model,
+                         WasteResult, default_suite)
+from .fault_sim import (fault_waiting_time, fault_waiting_time_batched,
+                        max_job_scale, max_job_scale_batched,
+                        theoretical_waste_bound, trace_grid, waste_over_trace,
+                        waste_over_trace_batched, waste_vs_fault_ratio,
+                        waste_vs_fault_ratio_batched)
+from .trace import (FaultEvent, FaultTrace, generate_trace, iid_fault_masks,
+                    iid_fault_sets, to_4gpu_trace)
 from .cost_model import (ALL_BOMS, ArchBOM, Component, INFINITEHBD_K2,
                          INFINITEHBD_K3, NVL36, NVL72, NVL576, TPUV4,
                          aggregate_cost, cost_ratio, table6)

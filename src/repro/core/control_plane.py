@@ -64,7 +64,8 @@ class ClusterManager:
     """Global controller: faults in -> new MeshPlan out."""
 
     def __init__(self, num_nodes: int, gpus_per_node: int = 4, k: int = 3,
-                 nodes_per_tor: int = 8, agg_domain: int = 64, seed: int = 0):
+                 nodes_per_tor: int = 8, agg_domain: int = 64, seed: int = 0,
+                 incremental: bool = True):
         from .orchestrator import deployment_strategy
         self.cfg = TopologyConfig(num_nodes, gpus_per_node, k)
         # the topology graph lives in HBD-position space (deployment order)
@@ -80,6 +81,42 @@ class ClusterManager:
         self.log: List[ReconfigEvent] = []
         self.current_plan: Optional[MeshPlan] = None
         self.physical_faults: set = set()
+        # Incremental orchestration: a delta-updated capacity tracker lets
+        # fault/repair events skip the O(cluster) elastic-DP probe ladder.
+        self.incremental = incremental
+        self._tracker = None
+
+    # ------------------------------------------------------- capacity view
+
+    def _build_tracker(self, m: int):
+        from .orchestrator import IncrementalOrchestrator
+        self._tracker = IncrementalOrchestrator(
+            self.dep.order, m, self.k, set(self.physical_faults))
+        return self._tracker
+
+    def _sync_tracker(self, m: int, kind: str, nodes: Tuple[int, ...]):
+        """Keep the incremental orchestrator in lockstep with fault state.
+
+        Applies the event delta when the tracker is current; rebuilds from
+        ``physical_faults`` on a TP-size change or any detected desync (e.g.
+        events processed while ``incremental`` was off).
+        """
+        if self._tracker is not None and self._tracker.m == m:
+            apply = (self._tracker.fault if kind == "fault"
+                     else self._tracker.repair)
+            for u in nodes:
+                apply(u)
+            if self._tracker.faults == self.physical_faults:
+                return self._tracker
+        return self._build_tracker(m)
+
+    def placeable_gpus(self, tp_size: int) -> int:
+        """Current max placeable capacity at ``tp_size`` (delta-maintained)."""
+        m = max(1, tp_size // self.cfg.gpus_per_node)
+        if (self._tracker is None or self._tracker.m != m
+                or self._tracker.faults != self.physical_faults):
+            self._build_tracker(m)
+        return self._tracker.capacity_nodes() * self.cfg.gpus_per_node
 
     # ------------------------------------------------------------- events
 
@@ -102,9 +139,21 @@ class ClusterManager:
                 tp_size: int, dp_size: int, pod_size: int) -> ReconfigEvent:
         plan = None
         dp = dp_size
+        cap_groups = None
+        if self.incremental:
+            # Delta-updated capacity: Algorithm 5 with 0 constraints degrades
+            # to the unconstrained pass, so DCN-free capacity is exactly the
+            # feasibility frontier -- infeasible DP degrees are skipped
+            # without running the orchestrator at all.
+            tracker = self._sync_tracker(max(1, tp_size // self.cfg.gpus_per_node),
+                                         kind, nodes)
+            cap_groups = tracker.capacity_groups()
         # Elastic scaling: shrink DP degree until the orchestrator can place
         # the job on the healthy subgraph (the paper's single-job priority).
         while dp >= 1:
+            if cap_groups is not None and dp * pod_size > cap_groups:
+                dp //= 2
+                continue
             try:
                 plan = plan_mesh(self.cfg.num_nodes, self.cfg.gpus_per_node,
                                  tp_size, dp, pod_size,

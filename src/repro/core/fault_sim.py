@@ -18,8 +18,8 @@ from typing import Dict, List, Sequence, Set
 
 import numpy as np
 
-from .hbd_models import HBDModel, WasteResult
-from .trace import FaultTrace, iid_fault_sets
+from .hbd_models import BatchedWasteResult, HBDModel, WasteResult
+from .trace import FaultTrace, iid_fault_masks, iid_fault_sets
 
 
 @dataclasses.dataclass
@@ -32,6 +32,13 @@ class TraceStats:
     series: np.ndarray
 
 
+def _stats_from_series(name: str, tp_size: int,
+                       series: np.ndarray) -> TraceStats:
+    return TraceStats(name, tp_size, float(series.mean()),
+                      float(np.percentile(series, 50)),
+                      float(np.percentile(series, 99)), series)
+
+
 def waste_over_trace(model: HBDModel, trace: FaultTrace, tp_size: int,
                      samples: int = 400) -> TraceStats:
     ts = trace.sample_times(samples)
@@ -39,9 +46,58 @@ def waste_over_trace(model: HBDModel, trace: FaultTrace, tp_size: int,
     for i, t in enumerate(ts):
         faults = {u for u in trace.faulty_at(t) if u < model.num_nodes}
         series[i] = model.evaluate(faults, tp_size).waste_ratio
-    return TraceStats(model.name, tp_size, float(series.mean()),
-                      float(np.percentile(series, 50)),
-                      float(np.percentile(series, 99)), series)
+    return _stats_from_series(model.name, tp_size, series)
+
+
+# --------------------------------------------------------------------------
+# Batched path: same metrics, one vectorized grid evaluation per model.
+# Each wrapper reproduces its scalar sibling bit-for-bit (identical snapshot
+# sets, identical integer placement, identical float reductions).
+# --------------------------------------------------------------------------
+
+def trace_grid(model: HBDModel, trace: FaultTrace, tp_sizes: Sequence[int],
+               samples: int = 400) -> BatchedWasteResult:
+    """Evaluate ``model`` on every (trace snapshot, TP size) pair at once."""
+    masks = trace.fault_masks(trace.sample_times(samples))
+    return model.evaluate_batch(masks, tp_sizes)
+
+
+def waste_over_trace_batched(model: HBDModel, trace: FaultTrace,
+                             tp_sizes: Sequence[int],
+                             samples: int = 400) -> List[TraceStats]:
+    grid = trace_grid(model, trace, tp_sizes, samples)
+    waste = grid.waste_ratio
+    return [_stats_from_series(model.name, int(tp), waste[:, ti])
+            for ti, tp in enumerate(grid.tp_sizes)]
+
+
+def waste_vs_fault_ratio_batched(model: HBDModel, tp_size: int,
+                                 fault_ratios: Sequence[float],
+                                 samples: int = 20,
+                                 seed: int = 0) -> List[float]:
+    out = []
+    for fr in fault_ratios:
+        masks = iid_fault_masks(model.num_nodes, fr, samples, seed)
+        grid = model.evaluate_batch(masks, [tp_size])
+        out.append(float(np.mean(grid.waste_ratio[:, 0])))
+    return out
+
+
+def max_job_scale_batched(model: HBDModel, trace: FaultTrace,
+                          tp_sizes: Sequence[int],
+                          samples: int = 200) -> List[float]:
+    grid = trace_grid(model, trace, tp_sizes, samples)
+    return [float(np.percentile(grid.placed_gpus[:, ti].astype(float), 5))
+            for ti in range(len(grid.tp_sizes))]
+
+
+def fault_waiting_time_batched(model: HBDModel, trace: FaultTrace,
+                               tp_size: int, job_gpus: Sequence[int],
+                               samples: int = 400) -> List[float]:
+    """Waiting-time share for several job sizes from one grid evaluation."""
+    grid = trace_grid(model, trace, [tp_size], samples)
+    placed = grid.placed_gpus[:, 0]
+    return [float((placed < jg).sum() / len(placed)) for jg in job_gpus]
 
 
 def waste_vs_fault_ratio(model: HBDModel, tp_size: int,

@@ -28,6 +28,8 @@ import dataclasses
 import math
 from typing import Dict, List, Sequence, Set
 
+import numpy as np
+
 from .orchestrator import healthy_components
 
 
@@ -54,8 +56,55 @@ class WasteResult:
         return self.placed_gpus  # caller divides by tp_size
 
 
+@dataclasses.dataclass
+class BatchedWasteResult:
+    """Vectorized :class:`WasteResult` over a ``(snapshots, tp_sizes)`` grid.
+
+    ``total_gpus`` is per TP size because granular models (SiP-Ring) round the
+    cluster down to a whole number of rings, so the modeled capacity itself
+    depends on TP.  ``faulty_gpus`` is per snapshot *and* TP for the same
+    reason (faults on unmodeled tail nodes don't count).
+    """
+
+    tp_sizes: np.ndarray     # (T,) int
+    total_gpus: np.ndarray   # (T,) int
+    faulty_gpus: np.ndarray  # (S, T) int
+    placed_gpus: np.ndarray  # (S, T) int
+
+    @property
+    def healthy_gpus(self) -> np.ndarray:
+        return self.total_gpus[None, :] - self.faulty_gpus
+
+    @property
+    def wasted_gpus(self) -> np.ndarray:
+        return self.healthy_gpus - self.placed_gpus
+
+    @property
+    def waste_ratio(self) -> np.ndarray:
+        total = self.total_gpus[None, :]
+        return np.divide(self.wasted_gpus, total,
+                         out=np.zeros(self.placed_gpus.shape),
+                         where=total != 0)
+
+    def result(self, snapshot: int, tp_index: int = 0) -> WasteResult:
+        """Scalar view of one grid cell (for spot checks / logging)."""
+        return WasteResult(int(self.total_gpus[tp_index]),
+                           int(self.faulty_gpus[snapshot, tp_index]),
+                           int(self.placed_gpus[snapshot, tp_index]))
+
+
 class HBDModel:
-    """Base: a cluster of ``num_nodes`` nodes x ``gpus_per_node`` GPUs."""
+    """Base: a cluster of ``num_nodes`` nodes x ``gpus_per_node`` GPUs.
+
+    Two evaluation paths, guaranteed to agree bit-for-bit:
+
+      * ``evaluate(faults, tp)``            -- one snapshot (reference path);
+      * ``evaluate_batch(masks, tp_sizes)`` -- a ``(snapshots x tp_sizes)``
+        grid in vectorized NumPy; subclasses override ``_batch_eval`` with
+        closed-form kernels, the base class falls back to looping
+        ``evaluate``.  Kernels are pure array-in/array-out so a ``jax.vmap``
+        backend can slot in later (see ROADMAP).
+    """
 
     name = "base"
 
@@ -66,6 +115,42 @@ class HBDModel:
 
     def evaluate(self, faults: Set[int], tp_size: int) -> WasteResult:
         raise NotImplementedError
+
+    def evaluate_batch(self, fault_masks: np.ndarray,
+                       tp_sizes: Sequence[int]) -> BatchedWasteResult:
+        """Evaluate every (snapshot, TP size) pair of the grid.
+
+        ``fault_masks`` is a ``(snapshots, nodes)`` bool matrix; columns
+        beyond ``num_nodes`` are ignored and missing columns read healthy,
+        mirroring the scalar callers' ``u < model.num_nodes`` clipping.
+        """
+        masks = self._clip_masks(fault_masks)
+        tps = np.asarray(list(tp_sizes), dtype=np.int64)
+        return self._batch_eval(masks, tps)
+
+    def _batch_eval(self, masks: np.ndarray,
+                    tps: np.ndarray) -> BatchedWasteResult:
+        snaps, tcount = masks.shape[0], len(tps)
+        total = np.zeros(tcount, dtype=np.int64)
+        faulty = np.zeros((snaps, tcount), dtype=np.int64)
+        placed = np.zeros((snaps, tcount), dtype=np.int64)
+        fault_sets = [set(np.nonzero(row)[0].tolist()) for row in masks]
+        for ti, tp in enumerate(tps):
+            for si, faults in enumerate(fault_sets):
+                r = self.evaluate(faults, int(tp))
+                total[ti] = r.total_gpus
+                faulty[si, ti] = r.faulty_gpus
+                placed[si, ti] = r.placed_gpus
+        return BatchedWasteResult(tps, total, faulty, placed)
+
+    def _clip_masks(self, fault_masks: np.ndarray) -> np.ndarray:
+        masks = np.asarray(fault_masks, dtype=bool)
+        if masks.ndim != 2:
+            raise ValueError(f"fault_masks must be 2-D, got {masks.shape}")
+        if masks.shape[1] >= self.num_nodes:
+            return masks[:, :self.num_nodes]
+        pad = np.zeros((masks.shape[0], self.num_nodes - masks.shape[1]), bool)
+        return np.concatenate([masks, pad], axis=1)
 
     def _faulty_gpus(self, faults: Set[int]) -> int:
         return len(faults) * self.gpus_per_node
@@ -80,6 +165,16 @@ class BigSwitch(HBDModel):
         healthy = self.total_gpus - self._faulty_gpus(faults)
         placed = (healthy // tp_size) * tp_size
         return WasteResult(self.total_gpus, self._faulty_gpus(faults), placed)
+
+    def _batch_eval(self, masks: np.ndarray,
+                    tps: np.ndarray) -> BatchedWasteResult:
+        faulty = masks.sum(axis=1, dtype=np.int64)[:, None] * self.gpus_per_node
+        healthy = self.total_gpus - faulty                       # (S, 1)
+        placed = (healthy // tps[None, :]) * tps[None, :]        # (S, T)
+        total = np.full(len(tps), self.total_gpus, dtype=np.int64)
+        return BatchedWasteResult(tps, total,
+                                  np.broadcast_to(faulty, placed.shape).copy(),
+                                  placed)
 
 
 class InfiniteHBDModel(HBDModel):
@@ -109,6 +204,69 @@ class InfiniteHBDModel(HBDModel):
         placed_nodes = sum((len(c) // m) * m for c in comps)
         return WasteResult(self.total_gpus, self._faulty_gpus(faults),
                            placed_nodes * self.gpus_per_node)
+
+    def _batch_eval(self, masks: np.ndarray,
+                    tps: np.ndarray) -> BatchedWasteResult:
+        """Vectorized K-hop component analysis over all snapshots at once.
+
+        A gap of >= K consecutive faults splits the line, so a node's
+        component id is the running count of completed K-fault-runs before
+        it.  Flattening all snapshots with per-row offsets turns component
+        sizing into one run-length encoding over the sorted id stream.
+        """
+        snaps, n = masks.shape
+        k = self.k
+        # win[:, i] = number of faults in masks[:, i-k+1 .. i]
+        cs = np.zeros((snaps, n + 1), np.int32)
+        np.cumsum(masks, axis=1, dtype=np.int32, out=cs[:, 1:])
+        runk = np.zeros((snaps, n), dtype=bool)
+        if n >= k:
+            runk[:, k - 1:] = (cs[:, k:] - cs[:, :n - k + 1]) == k
+        cid = np.cumsum(runk, axis=1)
+        healthy = ~masks
+        # per-row offsets keep flattened ids strictly increasing across rows
+        gids = (cid + (np.arange(snaps, dtype=np.int64) * (n + 1))[:, None])[healthy]
+        if gids.size:
+            bounds = np.flatnonzero(np.diff(gids)) + 1
+            starts = np.concatenate([[0], bounds])
+            sizes = np.diff(np.concatenate([starts, [gids.size]]))
+            comp_row = gids[starts] // (n + 1)
+        else:
+            sizes = np.zeros(0, dtype=np.int64)
+            comp_row = np.zeros(0, dtype=np.int64)
+
+        # closed-ring wrap: first and last components merge when the
+        # wrap-around fault gap is shorter than K (and there are >= 2 comps)
+        ncomp = np.bincount(comp_row, minlength=snaps)
+        merge_rows = np.zeros(snaps, dtype=bool)
+        s_first = s_last = None
+        if self.closed_ring and sizes.size:
+            any_h = healthy.any(axis=1)
+            first_h = np.where(any_h, healthy.argmax(axis=1), 0)
+            last_h = np.where(any_h, n - 1 - healthy[:, ::-1].argmax(axis=1), 0)
+            wrap_gap = first_h + n - last_h - 1
+            merge_rows = (ncomp > 1) & (wrap_gap < k)
+            row_lo = np.searchsorted(comp_row, np.arange(snaps), side="left")
+            row_hi = np.searchsorted(comp_row, np.arange(snaps), side="right") - 1
+            s_first = sizes[np.minimum(row_lo, sizes.size - 1)]
+            s_last = sizes[np.maximum(row_hi, 0)]
+
+        placed = np.zeros((snaps, len(tps)), dtype=np.int64)
+        for ti, tp in enumerate(tps):
+            m = max(1, int(tp) // self.gpus_per_node)
+            per_comp = (sizes // m) * m
+            nodes = np.bincount(comp_row, weights=per_comp,
+                                minlength=snaps).astype(np.int64)
+            if merge_rows.any():
+                merged = ((s_first + s_last) // m) * m
+                delta = merged - (s_first // m) * m - (s_last // m) * m
+                nodes = nodes + np.where(merge_rows, delta, 0)
+            placed[:, ti] = nodes * self.gpus_per_node
+        faulty = cs[:, -1].astype(np.int64)[:, None] * self.gpus_per_node
+        total = np.full(len(tps), self.total_gpus, dtype=np.int64)
+        return BatchedWasteResult(tps, total,
+                                  np.broadcast_to(faulty, placed.shape).copy(),
+                                  placed)
 
 
 class NVLModel(HBDModel):
@@ -148,6 +306,22 @@ class NVLModel(HBDModel):
                            self._faulty_gpus({u for u in faults
                                               if u < n_hbd * nodes_per_hbd}),
                            placed)
+
+    def _batch_eval(self, masks: np.ndarray,
+                    tps: np.ndarray) -> BatchedWasteResult:
+        npn = self.hbd_gpus // self.gpus_per_node
+        n_hbd = self.num_nodes // npn
+        spares = int(round(self.hbd_gpus * self.spare_fraction))
+        compute = self.hbd_gpus - spares
+        per_isle = masks[:, :n_hbd * npn].reshape(masks.shape[0], n_hbd, npn)
+        f_gpus = per_isle.sum(axis=2, dtype=np.int64) * self.gpus_per_node
+        avail = np.maximum(compute - np.maximum(f_gpus - spares, 0), 0)
+        placed = ((avail[:, :, None] // tps) * tps).sum(axis=1)     # (S, T)
+        faulty = f_gpus.sum(axis=1)[:, None]
+        total = np.full(len(tps), n_hbd * self.hbd_gpus, dtype=np.int64)
+        return BatchedWasteResult(tps, total,
+                                  np.broadcast_to(faulty, placed.shape).copy(),
+                                  placed)
 
 
 class TPUv4Model(HBDModel):
@@ -192,6 +366,37 @@ class TPUv4Model(HBDModel):
         placed = (usable // tp_size) * tp_size
         return WasteResult(total, faulty, placed)
 
+    def _batch_eval(self, masks: np.ndarray,
+                    tps: np.ndarray) -> BatchedWasteResult:
+        g = self.gpus_per_node
+        npc = self.cube_gpus // g
+        n_cubes = self.num_nodes // npc
+        snaps = masks.shape[0]
+        per_cube = masks[:, :n_cubes * npc].reshape(snaps, n_cubes, npc)
+        faulty = per_cube.sum(axis=(1, 2), dtype=np.int64)[:, None] * g
+        healthy_cubes = (~per_cube.any(axis=2)).sum(axis=1, dtype=np.int64)
+        placed = np.zeros((snaps, len(tps)), dtype=np.int64)
+        for ti, tp in enumerate(tps):
+            tp = int(tp)
+            if tp <= self.cube_gpus:
+                # sub-block grid; blocks at a cube's tail may overrun into the
+                # neighbor (same quirk as the scalar loop) -- clip at N
+                bn = max(1, tp // g)
+                starts = np.arange(0, npc, bn)
+                ids = (np.arange(n_cubes)[:, None, None] * npc
+                       + starts[None, :, None]
+                       + np.arange(bn)[None, None, :])        # (cubes, blocks, bn)
+                in_range = ids < self.num_nodes
+                f = masks[:, np.minimum(ids, self.num_nodes - 1)] & in_range
+                placed[:, ti] = (~f.any(axis=3)).sum(axis=(1, 2)) * tp
+            else:
+                usable = healthy_cubes * self.cube_gpus
+                placed[:, ti] = (usable // tp) * tp
+        total = np.full(len(tps), n_cubes * self.cube_gpus, dtype=np.int64)
+        return BatchedWasteResult(tps, total,
+                                  np.broadcast_to(faulty, placed.shape).copy(),
+                                  placed)
+
 
 class SiPRingModel(HBDModel):
     """Static fixed-size rings (SiP-Ring): ring size == TP size; any fault
@@ -211,6 +416,22 @@ class SiPRingModel(HBDModel):
         faulty = self._faulty_gpus({u for u in faults
                                     if u < n_rings * nodes_per_ring})
         return WasteResult(total, faulty, placed)
+
+    def _batch_eval(self, masks: np.ndarray,
+                    tps: np.ndarray) -> BatchedWasteResult:
+        snaps = masks.shape[0]
+        total = np.zeros(len(tps), dtype=np.int64)
+        faulty = np.zeros((snaps, len(tps)), dtype=np.int64)
+        placed = np.zeros((snaps, len(tps)), dtype=np.int64)
+        for ti, tp in enumerate(tps):
+            tp = int(tp)
+            npr = max(1, tp // self.gpus_per_node)
+            n_rings = self.num_nodes // npr
+            rings = masks[:, :n_rings * npr].reshape(snaps, n_rings, npr)
+            placed[:, ti] = (~rings.any(axis=2)).sum(axis=1, dtype=np.int64) * tp
+            faulty[:, ti] = rings.sum(axis=(1, 2), dtype=np.int64) * self.gpus_per_node
+            total[ti] = n_rings * npr * self.gpus_per_node
+        return BatchedWasteResult(tps, total, faulty, placed)
 
 
 def default_suite(num_nodes: int, gpus_per_node: int = 4) -> List[HBDModel]:

@@ -26,6 +26,7 @@ full occupancy, and none do when alignment survives faults.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import math
 import random
@@ -73,6 +74,194 @@ def orchestrate_dcn_free(order: Sequence[int], faults: Set[int], m: int,
             placement.append(comp[:m])
             comp = comp[m:]
     return placement
+
+
+# --------------------------------------------------------------------------
+# Incremental orchestration: delta updates on single fault/repair events
+# --------------------------------------------------------------------------
+
+class _Component:
+    """One healthy K-hop component: sorted healthy positions + carved groups.
+
+    ``groups`` holds only *complete* TP groups (physical node ids), exactly
+    as Algorithm 2 carves them -- the sub-``m`` remainder is implicit.
+    """
+
+    __slots__ = ("healthy", "groups")
+
+    def __init__(self, healthy: List[int], groups: Placement):
+        self.healthy = healthy
+        self.groups = groups
+
+    @property
+    def start(self) -> int:
+        return self.healthy[0]
+
+    @property
+    def end(self) -> int:
+        return self.healthy[-1]
+
+
+class IncrementalOrchestrator:
+    """Algorithm 2 with delta updates on single fault/repair events.
+
+    Maintains the healthy K-hop component structure along a fixed HBD
+    ``order`` and the per-component TP-group carving.  Because Algorithm 2
+    carves groups sequentially, an event at healthy-index ``i`` of a
+    component leaves groups ``< i // m`` untouched: a fault only splits or
+    shrinks its own component and re-carves the suffix; a repair only
+    extends or merges the components adjacent to its gap.  The per-event
+    cost is bounded by the affected suffix (C-speed list slicing), not by a
+    full O(cluster) Python re-scan.
+
+    ``placement()`` is guaranteed to equal
+    ``orchestrate_dcn_free(order, faults, m, k)`` after any event sequence
+    (the property test in ``tests/test_sim_engine.py`` enforces this).
+    """
+
+    def __init__(self, order: Sequence[int], m: int, k: int = 3,
+                 faults: Optional[Set[int]] = None):
+        if m < 1:
+            raise ValueError("TP group must span at least one node")
+        self.order = list(order)
+        self.m = m
+        self.k = k
+        self.pos_of = {u: i for i, u in enumerate(self.order)}
+        self.faults: Set[int] = set(faults or ())
+        self._fault_pos = {self.pos_of[u] for u in self.faults
+                           if u in self.pos_of}
+        self._comps: List[_Component] = [
+            _Component([self.pos_of[u] for u in nodes], self._carve(
+                [self.pos_of[u] for u in nodes]))
+            for nodes in healthy_components(self.order, self.faults, self.k)]
+        self.events_applied = 0
+
+    # ------------------------------------------------------------ queries
+
+    def placement(self) -> Placement:
+        return [grp for comp in self._comps for grp in comp.groups]
+
+    def capacity_groups(self) -> int:
+        return sum(len(comp.groups) for comp in self._comps)
+
+    def capacity_nodes(self) -> int:
+        return self.capacity_groups() * self.m
+
+    # ------------------------------------------------------------- events
+
+    def fault(self, node: int) -> None:
+        if node in self.faults or node not in self.pos_of:
+            self.faults.add(node)
+            return
+        self.faults.add(node)
+        p = self.pos_of[node]
+        self._fault_pos.add(p)
+        self.events_applied += 1
+        ci = self._comp_index_containing(p)
+        if ci is None:
+            return
+        comp = self._comps[ci]
+        h = comp.healthy
+        idx = bisect.bisect_left(h, p)
+        # contiguous faulty run now containing p
+        lo = p - 1
+        while lo in self._fault_pos:
+            lo -= 1
+        hi = p + 1
+        while hi in self._fault_pos:
+            hi += 1
+        if lo < comp.start:
+            # run touches the left edge: component shrinks from the left
+            # (the widened inter-component gap was already >= K); every
+            # group shifts, so carve afresh
+            del h[0]
+            if not h:
+                self._comps.pop(ci)
+            else:
+                comp.groups = self._carve(h)
+        elif hi > comp.end:
+            # run touches the right edge: drop the tail node, at most the
+            # last group changes
+            del h[-1]
+            self._recarve_suffix(comp, len(h))
+        elif hi - lo - 1 >= self.k:
+            # the gap reached K: split around the run
+            left = _Component(h[:idx], comp.groups[:idx // self.m])
+            right_h = h[idx + 1:]
+            right = _Component(right_h, self._carve(right_h))
+            self._comps[ci:ci + 1] = [c for c in (left, right) if c.healthy]
+        else:
+            # interior removal inside a still-bridged gap
+            del h[idx]
+            self._recarve_suffix(comp, idx)
+
+    def repair(self, node: int) -> None:
+        if node not in self.faults:
+            return
+        self.faults.discard(node)
+        if node not in self.pos_of:
+            return
+        p = self.pos_of[node]
+        self._fault_pos.discard(p)
+        self.events_applied += 1
+        ci = self._comp_index_containing(p)
+        if ci is not None:
+            # p sat in a bridged (< K) gap inside one component: insert
+            comp = self._comps[ci]
+            idx = bisect.bisect_left(comp.healthy, p)
+            comp.healthy.insert(idx, p)
+            self._recarve_suffix(comp, idx)
+            return
+        # p lies in an inter-component gap (or beyond the ends); the gaps on
+        # each side of p are entirely faulty, so merging is a pure gap-length
+        # check against K
+        i = bisect.bisect_right(self._comps, p,
+                                key=lambda c: c.healthy[0]) - 1
+        # comps[i] has start <= p and (not containing, checked above) end < p
+        left = i if i >= 0 else None
+        right = i + 1 if i + 1 < len(self._comps) else None
+        insert_at = i + 1
+        lcomp = self._comps[left] if left is not None else None
+        rcomp = self._comps[right] if right is not None else None
+        merge_l = lcomp is not None and (p - lcomp.end - 1) < self.k
+        merge_r = rcomp is not None and (rcomp.start - p - 1) < self.k
+        if merge_l:
+            keep = len(lcomp.healthy) // self.m      # complete groups survive
+            healthy = lcomp.healthy + [p] + (rcomp.healthy if merge_r else [])
+            groups = lcomp.groups[:keep] + self._carve(healthy, keep * self.m)
+            merged = _Component(healthy, groups)
+            hi_i = right + 1 if merge_r else left + 1
+            self._comps[left:hi_i] = [merged]
+        elif merge_r:
+            healthy = [p] + rcomp.healthy
+            self._comps[right] = _Component(healthy, self._carve(healthy))
+        else:
+            self._comps.insert(insert_at,
+                               _Component([p], self._carve([p])))
+
+    # ----------------------------------------------------------- internals
+
+    def _comp_index_containing(self, p: int) -> Optional[int]:
+        # spans are disjoint and _comps stays sorted by start
+        i = bisect.bisect_right(self._comps, p,
+                                key=lambda c: c.healthy[0]) - 1
+        if i >= 0 and self._comps[i].healthy[-1] >= p:
+            return i
+        return None
+
+    def _carve(self, positions: Sequence[int], from_idx: int = 0) -> Placement:
+        """Complete m-groups of ``positions[from_idx:]`` as physical ids."""
+        order, m = self.order, self.m
+        return [[order[q] for q in positions[j:j + m]]
+                for j in range(from_idx, len(positions) - m + 1, m)]
+
+    def _recarve_suffix(self, comp: _Component, idx: int) -> None:
+        """Re-carve groups from the one containing healthy-index ``idx``."""
+        g0 = idx // self.m
+        del comp.groups[g0:]
+        comp.groups.extend(self._carve(comp.healthy, g0 * self.m))
+        if not comp.healthy:
+            self._comps.remove(comp)
 
 
 # --------------------------------------------------------------------------

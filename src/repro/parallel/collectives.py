@@ -27,9 +27,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from . import compat
+
 
 def _axis_size(axis_name: str) -> int:
-    return lax.axis_size(axis_name)
+    return compat.axis_size(axis_name)
 
 
 def ring_reduce_scatter(x: jnp.ndarray, axis_name: str,

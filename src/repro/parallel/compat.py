@@ -1,0 +1,34 @@
+"""JAX API compatibility shims.
+
+``jax.shard_map`` graduated from ``jax.experimental`` only in newer JAX
+releases; resolve whichever spelling this installation provides so the
+model code runs on both.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pre-graduation releases (e.g. 0.4.x)
+    from jax.experimental.shard_map import shard_map as _shard_map_experimental
+
+    _accepts_vma = "check_vma" in inspect.signature(
+        _shard_map_experimental).parameters
+
+    def shard_map(*args, **kwargs):
+        if not _accepts_vma and "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map_experimental(*args, **kwargs)
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:
+    def axis_size(axis_name):
+        """Size of a mapped axis (constant-folds inside shard_map)."""
+        return jax.lax.psum(1, axis_name)
+
+__all__ = ["shard_map", "axis_size"]

@@ -1,0 +1,25 @@
+"""Batched scenario engine: declarative fault sweeps over HBD architectures.
+
+Typical use::
+
+    from repro.sim import ScenarioSpec, TraceSnapshots, run_sweep, waste_table
+
+    spec = ScenarioSpec(num_nodes=720,
+                        snapshots=TraceSnapshots(trace_nodes=400, samples=400),
+                        tp_sizes=(16, 32, 64))
+    result = run_sweep(spec)            # (arch x snapshot x tp) grid, one shot
+    for row in waste_table(result):
+        print(row)
+"""
+
+from .engine import SweepResult, run_sweep, run_sweep_scalar
+from .scenario import (DEFAULT_ARCHITECTURES, IIDSnapshots, MODEL_REGISTRY,
+                       ScenarioSpec, TraceSnapshots, make_model)
+from .tables import fault_waiting_table, max_job_table, to_csv, waste_table
+
+__all__ = [
+    "SweepResult", "run_sweep", "run_sweep_scalar",
+    "ScenarioSpec", "TraceSnapshots", "IIDSnapshots",
+    "MODEL_REGISTRY", "DEFAULT_ARCHITECTURES", "make_model",
+    "waste_table", "max_job_table", "fault_waiting_table", "to_csv",
+]

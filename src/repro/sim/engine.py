@@ -1,0 +1,122 @@
+"""Batched sweep runner: evaluate a ScenarioSpec grid in vectorized chunks.
+
+The engine materializes the snapshot fault-mask matrix once, then runs every
+architecture's vectorized ``evaluate_batch`` kernel over it, chunking the
+snapshot axis so datacenter-scale sweeps (100k nodes x thousands of
+snapshots) stay within a bounded memory footprint.  Results land in a dense
+``(architectures, snapshots, tp_sizes)`` grid that the table helpers reduce
+to the paper's figures.
+
+The kernels are pure array functions, so swapping the NumPy backend for a
+``jax.vmap``/``jax.jit`` one (ROADMAP open item) only touches the models.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from ..core.hbd_models import HBDModel
+from .scenario import ScenarioSpec
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Dense result grid of one scenario sweep."""
+
+    spec: ScenarioSpec
+    names: List[str]         # architecture names, grid axis 0
+    tp_sizes: np.ndarray     # (T,), grid axis 2
+    total_gpus: np.ndarray   # (A, T)
+    faulty_gpus: np.ndarray  # (A, S, T)
+    placed_gpus: np.ndarray  # (A, S, T)
+
+    @property
+    def num_snapshots(self) -> int:
+        return self.placed_gpus.shape[1]
+
+    @property
+    def healthy_gpus(self) -> np.ndarray:
+        return self.total_gpus[:, None, :] - self.faulty_gpus
+
+    @property
+    def waste_ratio(self) -> np.ndarray:
+        total = np.broadcast_to(self.total_gpus[:, None, :],
+                                self.placed_gpus.shape)
+        return np.divide(self.healthy_gpus - self.placed_gpus, total,
+                         out=np.zeros(self.placed_gpus.shape),
+                         where=total != 0)
+
+    def index(self, name: str) -> int:
+        return self.names.index(name)
+
+    def tp_index(self, tp: int) -> int:
+        return int(np.nonzero(self.tp_sizes == tp)[0][0])
+
+
+def run_sweep(spec: ScenarioSpec, *, masks: Optional[np.ndarray] = None,
+              models: Optional[Sequence[HBDModel]] = None,
+              chunk_snapshots: int = 1024) -> SweepResult:
+    """Evaluate the full scenario grid.
+
+    ``masks``/``models`` may be supplied to reuse an already-materialized
+    snapshot matrix or model instances (the benchmarks do both so timing
+    isolates the kernels).
+    """
+    if masks is None:
+        masks = spec.snapshots.masks(spec.num_nodes)
+    masks = np.asarray(masks, dtype=bool)
+    if models is None:
+        models = spec.models()
+    names = [m.name for m in models]
+    snaps = masks.shape[0]
+    tcount = len(spec.tp_sizes)
+
+    total = np.zeros((len(models), tcount), dtype=np.int64)
+    faulty = np.zeros((len(models), snaps, tcount), dtype=np.int64)
+    placed = np.zeros((len(models), snaps, tcount), dtype=np.int64)
+    for lo in range(0, max(snaps, 1), chunk_snapshots):
+        chunk = masks[lo:lo + chunk_snapshots]
+        if not chunk.shape[0]:
+            break
+        for ai, model in enumerate(models):
+            grid = model.evaluate_batch(chunk, spec.tp_sizes)
+            total[ai] = grid.total_gpus
+            faulty[ai, lo:lo + chunk.shape[0]] = grid.faulty_gpus
+            placed[ai, lo:lo + chunk.shape[0]] = grid.placed_gpus
+    return SweepResult(spec, names, np.asarray(spec.tp_sizes, dtype=np.int64),
+                       total, faulty, placed)
+
+
+def run_sweep_scalar(spec: ScenarioSpec, *,
+                     masks: Optional[np.ndarray] = None,
+                     models: Optional[Sequence[HBDModel]] = None) -> SweepResult:
+    """Reference implementation: loop the scalar ``evaluate`` path.
+
+    Exists for equivalence testing and as the baseline the batched engine's
+    speedup is measured against (``python -m benchmarks.run sweep``).
+    """
+    if masks is None:
+        masks = spec.snapshots.masks(spec.num_nodes)
+    masks = np.asarray(masks, dtype=bool)
+    if models is None:
+        models = spec.models()
+    snaps = masks.shape[0]
+    tcount = len(spec.tp_sizes)
+    total = np.zeros((len(models), tcount), dtype=np.int64)
+    faulty = np.zeros((len(models), snaps, tcount), dtype=np.int64)
+    placed = np.zeros((len(models), snaps, tcount), dtype=np.int64)
+    for ai, model in enumerate(models):
+        clipped = masks[:, :model.num_nodes]
+        for si in range(snaps):
+            faults = set(np.nonzero(clipped[si])[0].tolist())
+            for ti, tp in enumerate(spec.tp_sizes):
+                r = model.evaluate(faults, int(tp))
+                total[ai, ti] = r.total_gpus
+                faulty[ai, si, ti] = r.faulty_gpus
+                placed[ai, si, ti] = r.placed_gpus
+    return SweepResult(spec, [m.name for m in models],
+                       np.asarray(spec.tp_sizes, dtype=np.int64),
+                       total, faulty, placed)

@@ -1,0 +1,106 @@
+"""Scenario specifications for datacenter-scale fault sweeps.
+
+A :class:`ScenarioSpec` names the full evaluation grid of one experiment --
+``snapshots x architectures x TP sizes`` -- declaratively, so sweeps are
+reproducible from the spec alone (every random quantity is seeded).
+
+Snapshot sources:
+
+  * :class:`TraceSnapshots` -- sample a production-like fault trace
+    (Appendix A generator, optionally Bayes-converted to 4-GPU nodes);
+  * :class:`IIDSnapshots`   -- i.i.d. node faults at a fixed ratio
+    (Fig. 14-style sweeps).
+
+Architectures are referenced by registry name (``big-switch``,
+``infinitehbd-k3``, ``nvl-72``, ``tpuv4``, ``sip-ring``, ...), matching the
+``HBDModel.name`` attributes of the §6.1 evaluation suite.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.hbd_models import (BigSwitch, HBDModel, InfiniteHBDModel,
+                               NVLModel, SiPRingModel, TPUv4Model)
+from ..core.trace import generate_trace, iid_fault_masks, to_4gpu_trace
+
+ModelFactory = Callable[[int, int], HBDModel]
+
+MODEL_REGISTRY: Dict[str, ModelFactory] = {
+    "big-switch": lambda n, g: BigSwitch(n, g),
+    "infinitehbd-k2": lambda n, g: InfiniteHBDModel(n, g, k=2),
+    "infinitehbd-k3": lambda n, g: InfiniteHBDModel(n, g, k=3),
+    "nvl-36": lambda n, g: NVLModel(n, g, hbd_gpus=36),
+    "nvl-72": lambda n, g: NVLModel(n, g, hbd_gpus=72),
+    "nvl-576": lambda n, g: NVLModel(n, g, hbd_gpus=576, spare_fraction=0.0),
+    "tpuv4": lambda n, g: TPUv4Model(n, g),
+    "sip-ring": lambda n, g: SiPRingModel(n, g),
+}
+
+#: The §6.1 comparison suite, in paper order.
+DEFAULT_ARCHITECTURES: Tuple[str, ...] = tuple(MODEL_REGISTRY)
+
+
+def make_model(name: str, num_nodes: int, gpus_per_node: int = 4) -> HBDModel:
+    try:
+        return MODEL_REGISTRY[name](num_nodes, gpus_per_node)
+    except KeyError:
+        raise KeyError(f"unknown architecture {name!r}; "
+                       f"registered: {sorted(MODEL_REGISTRY)}") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSnapshots:
+    """Snapshots sampled from an Appendix-A synthetic fault trace.
+
+    ``trace_nodes`` (8-GPU nodes fed to the generator) defaults to whatever
+    covers the swept cluster -- a trace narrower than the cluster would make
+    the uncovered tail read permanently healthy.  Pass it explicitly to pin
+    a specific trace (e.g. the paper's 400-node production-like one).
+    """
+
+    trace_nodes: Optional[int] = None
+    samples: int = 400
+    seed: int = 1
+    horizon_h: float = 348 * 24.0
+    convert_4gpu: bool = True       # apply the Appendix-A Bayes split
+
+    def masks(self, num_nodes: int) -> np.ndarray:
+        tn = self.trace_nodes
+        if tn is None:
+            tn = (num_nodes + 1) // 2 if self.convert_4gpu else num_nodes
+        tr = generate_trace(tn, horizon_h=self.horizon_h, seed=self.seed)
+        if self.convert_4gpu:
+            tr = to_4gpu_trace(tr)
+        return tr.fault_masks(tr.sample_times(self.samples))
+
+
+@dataclasses.dataclass(frozen=True)
+class IIDSnapshots:
+    """I.i.d. snapshots at a fixed node-fault ratio."""
+
+    fault_ratio: float
+    samples: int = 20
+    seed: int = 0
+
+    def masks(self, num_nodes: int) -> np.ndarray:
+        return iid_fault_masks(num_nodes, self.fault_ratio, self.samples,
+                               self.seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One sweep: ``snapshots x architectures x tp_sizes`` on a cluster."""
+
+    num_nodes: int
+    snapshots: object                                  # TraceSnapshots | IID...
+    tp_sizes: Tuple[int, ...] = (16, 32, 64)
+    architectures: Tuple[str, ...] = DEFAULT_ARCHITECTURES
+    gpus_per_node: int = 4
+
+    def models(self) -> Sequence[HBDModel]:
+        return [make_model(a, self.num_nodes, self.gpus_per_node)
+                for a in self.architectures]

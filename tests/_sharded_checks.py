@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.parallel.compat import shard_map
 
 
 def check_collectives():
@@ -21,8 +22,8 @@ def check_collectives():
         ring_all_reduce, ring_reduce_scatter)
     mesh = jax.make_mesh((8,), ("model",))
     x = jnp.arange(8 * 16 * 3, dtype=jnp.float32).reshape(8, 16, 3)
-    sm = lambda f: jax.shard_map(f, mesh=mesh, in_specs=P("model"),
-                                 out_specs=P("model"))
+    sm = lambda f: shard_map(f, mesh=mesh, in_specs=P("model"),
+                             out_specs=P("model"))
     ring = jax.jit(sm(lambda xl: ring_all_reduce(xl, "model", impl="ring")))(x)
     psum = jax.jit(sm(lambda xl: ring_all_reduce(xl, "model", impl="psum")))(x)
     assert np.allclose(np.asarray(ring), np.asarray(psum)), "ring != psum"
@@ -158,8 +159,8 @@ def check_gpipe():
     def run(xr):
         return gpipe(stage_fn, xr, axis="pod", n_micro=n_micro)
 
-    out = jax.jit(jax.shard_map(run, mesh=mesh, in_specs=P(),
-                                out_specs=P(), check_vma=False))(x_mb)
+    out = jax.jit(shard_map(run, mesh=mesh, in_specs=P(),
+                            out_specs=P(), check_vma=False))(x_mb)
     # reference: apply the 4 stages sequentially
     ref = x_mb
     for s in range(4):

@@ -1,14 +1,11 @@
 """Fault-resilience models, trace generation, cost model, MFU simulator."""
 
-import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.cost_model import (ALL_BOMS, INFINITEHBD_K2, NVL72, TPUV4,
                                    cost_ratio, table6)
 from repro.core.fault_sim import theoretical_waste_bound, waste_over_trace
-from repro.core.hbd_models import (BigSwitch, InfiniteHBDModel, NVLModel,
-                                   SiPRingModel, TPUv4Model, default_suite)
+from repro.core.hbd_models import InfiniteHBDModel, NVLModel, TPUv4Model
 from repro.core.mfu_sim import (Cluster, GPT_MOE_1T, LLAMA31_405B, search)
 from repro.core.trace import generate_trace, to_4gpu_trace
 
@@ -36,33 +33,7 @@ def test_headline_cost_ratios():
 
 
 # ------------------------------------------------------------- waste models
-
-@given(st.sets(st.integers(0, 719), max_size=40), st.sampled_from([8, 16, 32, 64]))
-@settings(max_examples=40, deadline=None)
-def test_waste_invariants(faults, tp):
-    for model in default_suite(720, 4):
-        r = model.evaluate(faults, tp)
-        assert 0 <= r.placed_gpus <= r.healthy_gpus
-        assert r.placed_gpus % tp == 0
-        assert 0.0 <= r.waste_ratio <= 1.0
-
-
-@given(st.sets(st.integers(0, 719), max_size=30))
-@settings(max_examples=40, deadline=None)
-def test_bigswitch_is_lower_bound(faults):
-    bs = BigSwitch(720, 4)
-    for model in default_suite(720, 4):
-        assert model.evaluate(faults, 32).placed_gpus <= \
-            bs.evaluate(faults, 32).placed_gpus
-
-
-@given(st.sets(st.integers(0, 719), max_size=30))
-@settings(max_examples=40, deadline=None)
-def test_higher_k_never_worse(faults):
-    k2 = InfiniteHBDModel(720, 4, k=2).evaluate(faults, 32)
-    k3 = InfiniteHBDModel(720, 4, k=3).evaluate(faults, 32)
-    assert k3.placed_gpus >= k2.placed_gpus
-
+# (hypothesis property tests for these models live in test_properties.py)
 
 def test_paper_headline_waste_numbers():
     """TP-32 over the production-like trace (paper: InfHBD 0.53%,

@@ -19,6 +19,7 @@ def _rand(key, shape, dtype):
     return jax.random.normal(key, shape, jnp.float32).astype(dtype)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("sq,sk,hq,hkv,d,kw", [
     (128, 128, 4, 2, 64, dict(causal=True)),
@@ -39,6 +40,7 @@ def test_flash_attention_sweep(dtype, sq, sk, hq, hkv, d, kw):
                                atol=TOL[dtype], rtol=TOL[dtype])
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("b,hq,hkv,d,s,blk", [
     (2, 8, 2, 64, 300, 128),
@@ -59,6 +61,7 @@ def test_decode_attention_sweep(dtype, b, hq, hkv, d, s, blk):
                                atol=TOL[dtype], rtol=TOL[dtype])
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("bt,s,h,p,n,chunk", [
     (2, 64, 3, 16, 8, 16),

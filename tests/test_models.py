@@ -24,6 +24,7 @@ def _batch(cfg, b=2, s=32):
     return out
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", sorted(ARCHS))
 def test_arch_smoke_forward(arch):
     """Reduced config: one forward pass, expected shapes, finite loss."""
@@ -39,6 +40,7 @@ def test_arch_smoke_forward(arch):
     assert np.isfinite(float(loss))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", sorted(ARCHS))
 def test_arch_smoke_train_step(arch):
     """Reduced config: one full train step on CPU; finite loss + grads."""
@@ -52,6 +54,7 @@ def test_arch_smoke_train_step(arch):
     assert float(metrics["grad_norm"]) > 0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["deepseek-67b", "mixtral-8x7b",
                                   "mamba2-780m", "recurrentgemma-2b",
                                   "starcoder2-3b", "llama4-maverick-400b-a17b"])

@@ -1,0 +1,90 @@
+"""Hypothesis property tests (moved out of test_fault_sim/test_topology so
+those modules' deterministic tests run even without hypothesis installed).
+
+Requires the ``dev`` extra (``pip install -e .[dev]``); skips cleanly on a
+bare install.  Deterministic equivalence coverage lives in
+``test_sim_engine.py`` and always runs.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hbd_models import BigSwitch, InfiniteHBDModel, default_suite
+from repro.core.orchestrator import (deployment_strategy, orchestrate_dcn_free,
+                                     placement_fat_tree)
+from repro.core.topology import KHopRingTopology, TopologyConfig
+
+
+# ------------------------------------------------------------- waste models
+
+@given(st.sets(st.integers(0, 719), max_size=40), st.sampled_from([8, 16, 32, 64]))
+@settings(max_examples=40, deadline=None)
+def test_waste_invariants(faults, tp):
+    for model in default_suite(720, 4):
+        r = model.evaluate(faults, tp)
+        assert 0 <= r.placed_gpus <= r.healthy_gpus
+        assert r.placed_gpus % tp == 0
+        assert 0.0 <= r.waste_ratio <= 1.0
+
+
+@given(st.sets(st.integers(0, 719), max_size=30))
+@settings(max_examples=40, deadline=None)
+def test_bigswitch_is_lower_bound(faults):
+    bs = BigSwitch(720, 4)
+    for model in default_suite(720, 4):
+        assert model.evaluate(faults, 32).placed_gpus <= \
+            bs.evaluate(faults, 32).placed_gpus
+
+
+@given(st.sets(st.integers(0, 719), max_size=30))
+@settings(max_examples=40, deadline=None)
+def test_higher_k_never_worse(faults):
+    k2 = InfiniteHBDModel(720, 4, k=2).evaluate(faults, 32)
+    k3 = InfiniteHBDModel(720, 4, k=3).evaluate(faults, 32)
+    assert k3.placed_gpus >= k2.placed_gpus
+
+
+# ------------------------------------------------------- topology/orchestrator
+
+@given(st.integers(8, 64), st.sets(st.integers(0, 63), max_size=10),
+       st.integers(1, 4))
+@settings(max_examples=50, deadline=None)
+def test_waste_report_invariants(n, faults, k):
+    faults = {f for f in faults if f < n}
+    topo = KHopRingTopology(TopologyConfig(n, 4, k, closed_ring=False))
+    topo.inject_faults(faults)
+    rep = topo.waste_report(tp_nodes=4)
+    assert 0 <= rep["wasted_gpus"] <= rep["total_gpus"]
+    assert rep["placed_gpus"] % 16 == 0
+    assert rep["placed_gpus"] + rep["wasted_gpus"] + rep["faulty_gpus"] \
+        == rep["total_gpus"]
+
+
+@given(st.integers(16, 128), st.sets(st.integers(0, 127), max_size=20),
+       st.integers(1, 8), st.integers(1, 4))
+@settings(max_examples=60, deadline=None)
+def test_dcn_free_groups_are_valid_rings(n, faults, m, k):
+    faults = {f for f in faults if f < n}
+    placement = orchestrate_dcn_free(list(range(n)), faults, m, k)
+    for grp in placement:
+        assert len(grp) == m
+        assert not (set(grp) & faults)
+        for u, v in zip(grp, grp[1:]):
+            assert 0 < v - u <= k     # consecutive within K hops
+    # no node reused
+    used = [u for g in placement for u in g]
+    assert len(used) == len(set(used))
+
+
+@given(st.sets(st.integers(0, 255), max_size=24), st.integers(0, 20))
+@settings(max_examples=30, deadline=None)
+def test_binary_search_monotone_feasible(faults, n_constraints):
+    dep = deployment_strategy(256, 8)
+    m = 4
+    a = placement_fat_tree(dep, n_constraints, faults, m, 64, 3)
+    for grp in a:
+        assert len(grp) == m and not (set(grp) & faults)
+    used = [u for g in a for u in g]
+    assert len(used) == len(set(used))

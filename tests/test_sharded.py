@@ -10,6 +10,8 @@ import pytest
 
 ROOT = Path(__file__).resolve().parents[1]
 
+pytestmark = pytest.mark.slow  # 8-device subprocess runs
+
 
 def _run(which: str) -> str:
     env = dict(os.environ)

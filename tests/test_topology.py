@@ -3,12 +3,9 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.orchestrator import (cross_tor_traffic, deployment_strategy,
-                                     greedy_baseline, healthy_components,
-                                     orchestrate_dcn_free,
-                                     orchestrate_fat_tree, placement_fat_tree)
+                                     greedy_baseline, orchestrate_fat_tree)
 from repro.core.placement import (InsufficientCapacityError, plan_mesh,
                                   ring_adjacency_ok)
 from repro.core.topology import KHopRingTopology, TopologyConfig
@@ -43,35 +40,11 @@ class TestKHopRing:
         with pytest.raises(ValueError):
             topo.bypass_plan([0, 3])                    # 3 hops > K=2
 
-    @given(st.integers(8, 64), st.sets(st.integers(0, 63), max_size=10),
-           st.integers(1, 4))
-    @settings(max_examples=50, deadline=None)
-    def test_waste_report_invariants(self, n, faults, k):
-        faults = {f for f in faults if f < n}
-        topo = KHopRingTopology(TopologyConfig(n, 4, k, closed_ring=False))
-        topo.inject_faults(faults)
-        rep = topo.waste_report(tp_nodes=4)
-        assert 0 <= rep["wasted_gpus"] <= rep["total_gpus"]
-        assert rep["placed_gpus"] % 16 == 0
-        assert rep["placed_gpus"] + rep["wasted_gpus"] + rep["faulty_gpus"] \
-            == rep["total_gpus"]
+    # (hypothesis invariants for waste_report live in test_properties.py)
 
 
 class TestOrchestrator:
-    @given(st.integers(16, 128), st.sets(st.integers(0, 127), max_size=20),
-           st.integers(1, 8), st.integers(1, 4))
-    @settings(max_examples=60, deadline=None)
-    def test_dcn_free_groups_are_valid_rings(self, n, faults, m, k):
-        faults = {f for f in faults if f < n}
-        placement = orchestrate_dcn_free(list(range(n)), faults, m, k)
-        for grp in placement:
-            assert len(grp) == m
-            assert not (set(grp) & faults)
-            for u, v in zip(grp, grp[1:]):
-                assert 0 < v - u <= k     # consecutive within K hops
-        # no node reused
-        used = [u for g in placement for u in g]
-        assert len(used) == len(set(used))
+    # (hypothesis ring-validity properties live in test_properties.py)
 
     def test_deployment_order_is_permutation(self):
         dep = deployment_strategy(128, 8)
@@ -91,18 +64,6 @@ class TestOrchestrator:
         c_base = cross_tor_traffic(base, 8)
         assert c_opt["dp_cross_share"] < c_base["dp_cross_share"]
         assert c_opt["cross_tor_share"] < 0.05
-
-    @given(st.sets(st.integers(0, 255), max_size=24), st.integers(0, 20))
-    @settings(max_examples=30, deadline=None)
-    def test_binary_search_monotone_feasible(self, faults, n_constraints):
-        dep = deployment_strategy(256, 8)
-        m = 4
-        a = placement_fat_tree(dep, n_constraints, faults, m, 64, 3)
-        for grp in a:
-            assert len(grp) == m and not (set(grp) & faults)
-        used = [u for g in a for u in g]
-        assert len(used) == len(set(used))
-
 
 class TestMeshPlan:
     def test_plan_and_adjacency(self):
