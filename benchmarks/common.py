@@ -1,10 +1,13 @@
 """Benchmark harness utilities: each benchmark prints CSV rows
 ``name,us_per_call,derived`` where ``derived`` is the paper-comparable
-metric (waste ratio, MFU, cross-ToR share, ...)."""
+metric (waste ratio, MFU, cross-ToR share, ...).  Sections with CI gates
+also persist a ``BENCH_<name>.json`` payload (uploaded as a workflow
+artifact by the nightly job)."""
 
 from __future__ import annotations
 
 import json
+import os
 import time
 from typing import Callable
 
@@ -23,3 +26,13 @@ def row(name: str, us: float, derived) -> str:
     line = f"{name},{us:.1f},{derived}"
     print(line)
     return line
+
+
+def write_json(section: str, payload: dict) -> str:
+    """Persist a section's machine-readable results as ``BENCH_<section>.json``
+    (in ``BENCH_JSON_DIR`` when set, else the working directory)."""
+    path = os.path.join(os.environ.get("BENCH_JSON_DIR", "."),
+                        f"BENCH_{section}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return path

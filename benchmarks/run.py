@@ -1,14 +1,18 @@
 """Benchmark driver: one section per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--smoke] [section ...]
+  PYTHONPATH=src python -m benchmarks.run [--smoke] [--backend B]
+                                          [--snapshots N] [section ...]
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--smoke`` asks each section
-for a shrunken grid (CI-sized: seconds, not minutes); sections that predate
-the flag run unchanged.
+for a shrunken grid (CI-sized: seconds, not minutes); ``--backend`` /
+``--snapshots`` are forwarded to sections that accept them (the sweep
+section's engine matrix and scale knob); sections that predate the flags
+run unchanged.
 """
 
 from __future__ import annotations
 
+import argparse
 import inspect
 import sys
 import traceback
@@ -19,24 +23,26 @@ SECTIONS = ("waste_ratio", "max_job", "fault_waiting", "sweep", "mfu_tables",
 
 
 def main() -> None:
-    args = sys.argv[1:]
-    smoke = "--smoke" in args
-    unknown = [a for a in args if a.startswith("--") and a != "--smoke"]
-    if unknown:
-        print(f"unknown flag(s): {' '.join(unknown)} (supported: --smoke)",
-              file=sys.stderr)
-        sys.exit(2)
-    want = [a for a in args if not a.startswith("--")] or list(SECTIONS)
+    parser = argparse.ArgumentParser(description="benchmark driver")
+    parser.add_argument("--smoke", action="store_true")
+    parser.add_argument("--backend", choices=("numpy", "jax", "both"),
+                        default=None)
+    parser.add_argument("--snapshots", type=int, default=None)
+    parser.add_argument("sections", nargs="*", default=[])
+    args = parser.parse_args()
+    want = args.sections or list(SECTIONS)
+    forwardable = {"smoke": args.smoke, "backend": args.backend,
+                   "snapshots": args.snapshots}
     print("name,us_per_call,derived")
     failed = []
     for name in want:
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            print(f"# --- {name}{' (smoke)' if smoke else ''} ---")
-            if "smoke" in inspect.signature(mod.run).parameters:
-                mod.run(smoke=smoke)
-            else:
-                mod.run()
+            print(f"# --- {name}{' (smoke)' if args.smoke else ''} ---")
+            params = inspect.signature(mod.run).parameters
+            kwargs = {k: v for k, v in forwardable.items()
+                      if k in params and v is not None}
+            mod.run(**kwargs)
         except Exception as e:  # noqa: BLE001 - report and continue
             failed.append(name)
             print(f"# {name} FAILED: {type(e).__name__}: {e}")

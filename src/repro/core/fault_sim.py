@@ -19,6 +19,7 @@ from typing import Dict, List, Sequence, Set
 import numpy as np
 
 from .hbd_models import BatchedWasteResult, HBDModel, WasteResult
+from .reductions import percentile_capacity, waiting_share, waste_stats
 from .trace import FaultTrace, iid_fault_masks, iid_fault_sets
 
 
@@ -34,9 +35,7 @@ class TraceStats:
 
 def _stats_from_series(name: str, tp_size: int,
                        series: np.ndarray) -> TraceStats:
-    return TraceStats(name, tp_size, float(series.mean()),
-                      float(np.percentile(series, 50)),
-                      float(np.percentile(series, 99)), series)
+    return TraceStats(name, tp_size, *waste_stats(series), series)
 
 
 def waste_over_trace(model: HBDModel, trace: FaultTrace, tp_size: int,
@@ -87,7 +86,7 @@ def max_job_scale_batched(model: HBDModel, trace: FaultTrace,
                           tp_sizes: Sequence[int],
                           samples: int = 200) -> List[float]:
     grid = trace_grid(model, trace, tp_sizes, samples)
-    return [float(np.percentile(grid.placed_gpus[:, ti].astype(float), 5))
+    return [percentile_capacity(grid.placed_gpus[:, ti])
             for ti in range(len(grid.tp_sizes))]
 
 
@@ -97,7 +96,7 @@ def fault_waiting_time_batched(model: HBDModel, trace: FaultTrace,
     """Waiting-time share for several job sizes from one grid evaluation."""
     grid = trace_grid(model, trace, [tp_size], samples)
     placed = grid.placed_gpus[:, 0]
-    return [float((placed < jg).sum() / len(placed)) for jg in job_gpus]
+    return [waiting_share(placed, jg) for jg in job_gpus]
 
 
 def waste_vs_fault_ratio(model: HBDModel, tp_size: int,
@@ -122,7 +121,7 @@ def max_job_scale(model: HBDModel, trace: FaultTrace, tp_size: int,
     for i, t in enumerate(ts):
         faults = {u for u in trace.faulty_at(t) if u < model.num_nodes}
         cap[i] = model.evaluate(faults, tp_size).placed_gpus
-    return float(np.percentile(cap, 5))
+    return percentile_capacity(cap)
 
 
 def fault_waiting_time(model: HBDModel, trace: FaultTrace, tp_size: int,

@@ -1,0 +1,141 @@
+"""Counter-based PRNG: a NumPy mirror of JAX's threefry-2x32 stream.
+
+The batched scenario engine generates i.i.d. fault masks on-device with
+``jax.random`` (key-splitting per snapshot keeps generation chunk- and
+shard-invariant).  This module reimplements the exact same stream in pure
+NumPy so the NumPy backend produces bit-identical masks from the same seed:
+
+  * :func:`threefry_seed`     == ``jax.random.PRNGKey(seed)`` raw key data;
+  * :func:`threefry_fold_in`  == ``jax.random.fold_in`` (threefry impl);
+  * :func:`threefry_bits`     == ``jax.random.bits(key, (n,), uint32)``;
+  * :func:`counter_fault_masks` == the device-side mask generator in
+    ``repro.sim.jax_backend``.
+
+The mask itself is an integer-threshold comparison (``bits < round(ratio *
+2**32)``) rather than a float comparison, so backend equality never hinges
+on float rounding.  Both the "original" and "partitionable" threefry bit
+layouts are implemented (:func:`threefry_bits`), but the canonical mask
+stream of :func:`counter_fault_masks` is pinned to the original layout
+everywhere; the JAX backend only draws on device when the ambient config
+still produces that layout (``jax_backend.device_draws_canonical``) and
+falls back to these host masks otherwise.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_U32 = np.uint32
+_MASK32 = _U32(0xFFFFFFFF)
+_ROTATIONS = ((13, 15, 26, 6), (17, 29, 16, 24))
+# key-schedule injections after each 4-round group: (ks index for x0,
+# ks index for x1, round-group counter added to x1)
+_INJECT = ((1, 2, 1), (2, 0, 2), (0, 1, 3), (1, 2, 4), (2, 0, 5))
+
+
+def _rotl32(x: np.ndarray, d: int) -> np.ndarray:
+    d = _U32(d)
+    return ((x << d) | (x >> _U32(32 - int(d)))) & _MASK32
+
+
+def threefry2x32(k0: int, k1: int, c0: np.ndarray,
+                 c1: np.ndarray) -> tuple:
+    """The raw Threefry-2x32 block cipher on uint32 lanes (20 rounds)."""
+    with np.errstate(over="ignore"):
+        k0, k1 = _U32(k0), _U32(k1)
+        ks = (k0, k1, k0 ^ k1 ^ _U32(0x1BD11BDA))
+        x0 = (np.asarray(c0, _U32) + ks[0]) & _MASK32
+        x1 = (np.asarray(c1, _U32) + ks[1]) & _MASK32
+        for gi, (a, b, ctr) in enumerate(_INJECT):
+            for r in _ROTATIONS[gi % 2]:
+                x0 = (x0 + x1) & _MASK32
+                x1 = x0 ^ _rotl32(x1, r)
+            x0 = (x0 + ks[a]) & _MASK32
+            x1 = (x1 + ks[b] + _U32(ctr)) & _MASK32
+    return x0, x1
+
+
+def threefry_hash(key: np.ndarray, count: np.ndarray) -> np.ndarray:
+    """``jax._src.prng.threefry_2x32``: hash a flat uint32 counter stream."""
+    count = np.asarray(count, _U32).ravel()
+    odd = count.size % 2
+    if odd:
+        count = np.concatenate([count, np.zeros(1, _U32)])
+    half = count.size // 2
+    x0, x1 = threefry2x32(key[0], key[1], count[:half], count[half:])
+    out = np.concatenate([x0, x1])
+    return out[:-1] if odd else out
+
+
+def threefry_seed(seed: int) -> np.ndarray:
+    """Raw key data of ``jax.random.PRNGKey(seed)`` (threefry impl)."""
+    s = int(seed) & 0xFFFFFFFFFFFFFFFF
+    return np.array([s >> 32, s & 0xFFFFFFFF], dtype=_U32)
+
+
+def threefry_fold_in(key: np.ndarray, data: int) -> np.ndarray:
+    """``jax.random.fold_in(key, data)`` for a threefry key."""
+    return threefry_hash(key, threefry_seed(data))
+
+
+def threefry_bits(key: np.ndarray, size: int,
+                  partitionable: bool = False) -> np.ndarray:
+    """``jax.random.bits(key, (size,), uint32)`` for a threefry key.
+
+    ``partitionable`` selects JAX's ``jax_threefry_partitionable`` stream
+    (two parallel 32-bit counter lanes XORed) instead of the original flat
+    counter layout.
+    """
+    if size == 0:
+        return np.zeros(0, _U32)
+    if partitionable:
+        c0 = np.zeros(size, _U32)            # hi 32 bits of a 64-bit iota
+        c1 = np.arange(size, dtype=_U32)     # lo 32 bits
+        x0, x1 = threefry2x32(key[0], key[1], c0, c1)
+        return x0 ^ x1
+    return threefry_hash(key, np.arange(size, dtype=_U32))
+
+
+def ratio_threshold(ratio: float) -> int:
+    """Integer threshold for ``bits < threshold`` Bernoulli(ratio) draws."""
+    return min(1 << 32, max(0, int(round(float(ratio) * (1 << 32)))))
+
+
+def counter_fault_masks(num_nodes: int, node_fault_ratio: float,
+                        samples: int, seed: int = 0,
+                        partitionable: bool = False) -> np.ndarray:
+    """I.i.d. fault masks from the threefry counter stream.
+
+    Row ``i`` depends only on ``(seed, i)`` -- key ``fold_in(seed_key, i)``
+    hashed over a per-node counter -- so the matrix is invariant under
+    chunking and device sharding, and the JAX backend regenerates identical
+    rows on-device via ``jax.random`` without ever materializing the host
+    matrix (see ``repro.sim.jax_backend.counter_masks_device``).
+
+    The canonical stream is pinned to the *original* threefry bit layout
+    (``partitionable=False``) regardless of the environment, so a seeded
+    spec reproduces identically everywhere -- including numpy-only
+    installs and future JAX releases that flip the
+    ``jax_threefry_partitionable`` default (the JAX backend checks the
+    ambient flag and falls back to these host masks when the device draw
+    would not be canonical).
+    """
+    thresh = ratio_threshold(node_fault_ratio)
+    if samples == 0 or num_nodes == 0:
+        return np.zeros((samples, num_nodes), dtype=bool)
+    if thresh >= (1 << 32):
+        return np.ones((samples, num_nodes), dtype=bool)
+    root = threefry_seed(seed)
+    out = np.empty((samples, num_nodes), dtype=bool)
+    t32 = _U32(thresh)
+    for i in range(samples):
+        bits = threefry_bits(threefry_fold_in(root, i), num_nodes,
+                             partitionable)
+        out[i] = bits < t32
+    return out
+
+
+__all__ = [
+    "threefry2x32", "threefry_hash", "threefry_seed", "threefry_fold_in",
+    "threefry_bits", "ratio_threshold", "counter_fault_masks",
+]

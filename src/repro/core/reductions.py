@@ -1,0 +1,40 @@
+"""Shared grid reductions for fault-sweep results.
+
+One implementation of the mean/percentile/threshold reductions that both
+``repro.sim.tables`` (SweepResult grids) and the ``*_batched`` wrappers in
+``repro.core.fault_sim`` (per-model grids) apply -- previously duplicated in
+both modules and pinned bit-for-bit to the scalar paths by
+``tests/test_sim_engine.py``.  Keep the float conversions exactly as they
+are: reordering them changes low bits and breaks the pinning.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def waste_stats(series: np.ndarray) -> Tuple[float, float, float]:
+    """(mean, P50, P99) of a waste-ratio series (Fig. 13/14 reductions)."""
+    series = np.asarray(series)
+    return (float(series.mean()), float(np.percentile(series, 50)),
+            float(np.percentile(series, 99)))
+
+
+def percentile_capacity(placed: np.ndarray, percentile: float = 5.0) -> float:
+    """Placeable-GPU percentile over snapshots -- P5 is the job scale a long
+    run could hold through ~95% of the trace (Fig. 15)."""
+    return float(np.percentile(np.asarray(placed).astype(float), percentile))
+
+
+def waiting_share(placed: np.ndarray, job_gpus: int) -> float:
+    """Share of snapshots during which a ``job_gpus`` job cannot run because
+    placeable capacity < requirement (Fig. 16/23)."""
+    placed = np.asarray(placed)
+    if not len(placed):
+        return 0.0
+    return float((placed < job_gpus).sum() / len(placed))
+
+
+__all__ = ["waste_stats", "percentile_capacity", "waiting_share"]

@@ -12,18 +12,14 @@ from __future__ import annotations
 from typing import Optional, Set
 
 import jax
-import numpy as np
+
+from ..parallel.compat import make_auto_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    if hasattr(jax.sharding, "AxisType"):
-        return jax.make_mesh(
-            shape, axes,
-            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-    # pre-AxisType releases: meshes are Auto by default
-    return jax.make_mesh(shape, axes)
+    return make_auto_mesh(shape, axes)
 
 
 def make_orchestrated_production_mesh(*, multi_pod: bool = False,

@@ -31,4 +31,24 @@ else:
         """Size of a mapped axis (constant-folds inside shard_map)."""
         return jax.lax.psum(1, axis_name)
 
-__all__ = ["shard_map", "axis_size"]
+if hasattr(jax, "make_mesh"):
+    make_mesh = jax.make_mesh
+else:  # pre-0.4.35 releases
+    def make_mesh(axis_shapes, axis_names):
+        from jax.experimental import mesh_utils
+        from jax.sharding import Mesh
+        return Mesh(mesh_utils.create_device_mesh(tuple(axis_shapes)),
+                    tuple(axis_names))
+
+
+def make_auto_mesh(axis_shapes, axis_names):
+    """``make_mesh`` with every axis explicitly Auto on releases that have
+    ``jax.sharding.AxisType`` (older releases are Auto by default)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            tuple(axis_shapes), tuple(axis_names),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(tuple(axis_names)))
+    return make_mesh(axis_shapes, axis_names)
+
+
+__all__ = ["shard_map", "axis_size", "make_mesh", "make_auto_mesh"]

@@ -12,14 +12,17 @@ Typical use::
         print(row)
 """
 
-from .engine import SweepResult, run_sweep, run_sweep_scalar
-from .scenario import (DEFAULT_ARCHITECTURES, IIDSnapshots, MODEL_REGISTRY,
-                       ScenarioSpec, TraceSnapshots, make_model)
+from .engine import (BACKENDS, SweepResult, resolve_backend, run_sweep,
+                     run_sweep_scalar)
+from .scenario import (CounterIIDSnapshots, DEFAULT_ARCHITECTURES,
+                       IIDSnapshots, MODEL_REGISTRY, ScenarioSpec,
+                       TraceSnapshots, make_model)
 from .tables import fault_waiting_table, max_job_table, to_csv, waste_table
 
 __all__ = [
     "SweepResult", "run_sweep", "run_sweep_scalar",
-    "ScenarioSpec", "TraceSnapshots", "IIDSnapshots",
+    "BACKENDS", "resolve_backend",
+    "ScenarioSpec", "TraceSnapshots", "IIDSnapshots", "CounterIIDSnapshots",
     "MODEL_REGISTRY", "DEFAULT_ARCHITECTURES", "make_model",
     "waste_table", "max_job_table", "fault_waiting_table", "to_csv",
 ]

@@ -7,19 +7,63 @@ snapshots) stay within a bounded memory footprint.  Results land in a dense
 ``(architectures, snapshots, tp_sizes)`` grid that the table helpers reduce
 to the paper's figures.
 
-The kernels are pure array functions, so swapping the NumPy backend for a
-``jax.vmap``/``jax.jit`` one (ROADMAP open item) only touches the models.
+Two compute backends produce that grid bit-for-bit identically:
+
+  * ``backend="numpy"`` -- the vectorized host kernels on each model;
+  * ``backend="jax"``   -- ``repro.sim.jax_backend``: the same kernels as
+    pure ``jax.numpy`` functions under ``jax.vmap``/``jax.jit`` with the
+    snapshot axis sharded across devices (million-snapshot sweeps).
+
+``backend="auto"`` (the default) picks JAX whenever it is importable and
+every requested architecture has a jnp kernel; the ``REPRO_SWEEP_BACKEND``
+environment variable overrides the auto choice (CI runs the matrix both
+ways).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import List, Optional, Sequence
 
 import numpy as np
 
 from ..core.hbd_models import HBDModel
-from .scenario import ScenarioSpec
+from .scenario import CounterIIDSnapshots, ScenarioSpec
+
+BACKENDS = ("numpy", "jax")
+
+
+def resolve_backend(backend: Optional[str],
+                    models: Sequence[HBDModel]) -> str:
+    """Resolve ``backend`` ("auto"/None reads ``REPRO_SWEEP_BACKEND``).
+
+    An explicit ``backend="jax"`` raises when JAX (or a model kernel) is
+    missing.  ``REPRO_SWEEP_BACKEND=jax`` also raises when JAX itself is
+    unavailable (so a broken install can't silently green-light the CI jax
+    matrix leg on NumPy), but still falls back per-call for models without
+    a jnp kernel.
+    """
+    if backend in (None, "auto"):
+        backend = os.environ.get("REPRO_SWEEP_BACKEND", "auto").strip().lower() \
+            or "auto"
+        if backend not in ("auto",) + BACKENDS:
+            raise ValueError(
+                f"REPRO_SWEEP_BACKEND={backend!r} (want numpy|jax|auto)")
+        if backend in ("auto", "jax"):
+            from . import jax_backend
+            if backend == "jax" and not jax_backend.HAVE_JAX:
+                raise RuntimeError(
+                    "REPRO_SWEEP_BACKEND=jax but jax is unavailable")
+            return "jax" if jax_backend.available_for(models) else "numpy"
+        return backend
+    if backend == "jax":
+        from . import jax_backend
+        jax_backend.require(models)
+        return "jax"
+    if backend == "numpy":
+        return "numpy"
+    raise ValueError(f"unknown backend {backend!r} (numpy|jax|auto)")
 
 
 @dataclasses.dataclass
@@ -32,6 +76,7 @@ class SweepResult:
     total_gpus: np.ndarray   # (A, T)
     faulty_gpus: np.ndarray  # (A, S, T)
     placed_gpus: np.ndarray  # (A, S, T)
+    backend: str = "numpy"   # compute backend that produced the grid
 
     @property
     def num_snapshots(self) -> int:
@@ -58,25 +103,51 @@ class SweepResult:
 
 def run_sweep(spec: ScenarioSpec, *, masks: Optional[np.ndarray] = None,
               models: Optional[Sequence[HBDModel]] = None,
-              chunk_snapshots: int = 1024) -> SweepResult:
+              chunk_snapshots: int = 1024,
+              backend: str = "auto") -> SweepResult:
     """Evaluate the full scenario grid.
 
     ``masks``/``models`` may be supplied to reuse an already-materialized
     snapshot matrix or model instances (the benchmarks do both so timing
-    isolates the kernels).
+    isolates the kernels).  ``backend`` selects the compute path (see the
+    module docstring); the grids are bit-for-bit identical either way.
     """
-    if masks is None:
-        masks = spec.snapshots.masks(spec.num_nodes)
-    masks = np.asarray(masks, dtype=bool)
     if models is None:
         models = spec.models()
     names = [m.name for m in models]
+    tps = np.asarray(spec.tp_sizes, dtype=np.int64)
+    chosen = resolve_backend(backend, models)
+
+    if chosen == "jax":
+        from . import jax_backend
+        gen = None
+        if (masks is None and isinstance(spec.snapshots, CounterIIDSnapshots)
+                and jax_backend.device_draws_canonical()):
+            # counter-based spec: draw the masks on device with jax.random
+            # (bit-identical to the host mirror, no host matrix needed)
+            gen = jax_backend.MaskGen(spec.snapshots.samples, spec.num_nodes,
+                                      spec.snapshots.fault_ratio,
+                                      spec.snapshots.seed)
+        if gen is None:
+            if masks is None:
+                masks = spec.snapshots.masks(spec.num_nodes)
+            masks = np.asarray(masks, dtype=bool)
+        total, faulty, placed = jax_backend.sweep_grids(
+            models, spec.tp_sizes, masks=masks, gen=gen,
+            chunk_snapshots=chunk_snapshots)
+        return SweepResult(spec, names, tps, total, faulty, placed,
+                           backend="jax")
+
+    if masks is None:
+        masks = spec.snapshots.masks(spec.num_nodes)
+    masks = np.asarray(masks, dtype=bool)
     snaps = masks.shape[0]
     tcount = len(spec.tp_sizes)
 
     total = np.zeros((len(models), tcount), dtype=np.int64)
     faulty = np.zeros((len(models), snaps, tcount), dtype=np.int64)
     placed = np.zeros((len(models), snaps, tcount), dtype=np.int64)
+    chunk_snapshots = max(1, chunk_snapshots)     # same clamp as the jax path
     for lo in range(0, max(snaps, 1), chunk_snapshots):
         chunk = masks[lo:lo + chunk_snapshots]
         if not chunk.shape[0]:
@@ -86,8 +157,8 @@ def run_sweep(spec: ScenarioSpec, *, masks: Optional[np.ndarray] = None,
             total[ai] = grid.total_gpus
             faulty[ai, lo:lo + chunk.shape[0]] = grid.faulty_gpus
             placed[ai, lo:lo + chunk.shape[0]] = grid.placed_gpus
-    return SweepResult(spec, names, np.asarray(spec.tp_sizes, dtype=np.int64),
-                       total, faulty, placed)
+    return SweepResult(spec, names, tps, total, faulty, placed,
+                       backend="numpy")
 
 
 def run_sweep_scalar(spec: ScenarioSpec, *,
@@ -95,8 +166,10 @@ def run_sweep_scalar(spec: ScenarioSpec, *,
                      models: Optional[Sequence[HBDModel]] = None) -> SweepResult:
     """Reference implementation: loop the scalar ``evaluate`` path.
 
-    Exists for equivalence testing and as the baseline the batched engine's
-    speedup is measured against (``python -m benchmarks.run sweep``).
+    Exists for equivalence testing (``tests/test_sim_engine.py``).  The
+    ``sweep`` benchmark times its own historical scalar loop -- the seed
+    benchmarks' per-instant ``faulty_at`` extraction included -- so its
+    baseline covers mask materialization too, not just the kernels.
     """
     if masks is None:
         masks = spec.snapshots.masks(spec.num_nodes)

@@ -1,0 +1,422 @@
+"""JAX compute backend for the batched scenario engine.
+
+Every HBD model's ``evaluate_batch`` kernel is re-expressed as a pure
+``jax.numpy`` function over ONE snapshot mask, composed under ``jax.vmap``
+over the snapshot axis and ``jax.jit`` over the whole (architectures x
+snapshots x TP sizes) grid.  On multi-device hosts the snapshot axis is
+sharded across all devices with ``shard_map`` (via the
+``repro.parallel.compat`` shims), so million-snapshot sweeps scale with the
+device count.  Chunks are device-resident and their input buffers donated,
+keeping peak memory at ~one chunk regardless of sweep size.
+
+Guarantees (enforced by ``tests/test_jax_backend.py``):
+
+  * bit-for-bit equality with the NumPy engine -- kernels compute in int32
+    on device (all grid quantities fit comfortably) and are widened to the
+    engine's int64 grids on the host;
+  * deterministic results independent of chunking and device count;
+  * for :class:`~repro.sim.scenario.CounterIIDSnapshots` specs, fault masks
+    are generated *on device* with ``jax.random`` key-splitting (one
+    ``fold_in`` per snapshot index) and match the NumPy mirror in
+    ``repro.core.prng`` exactly, so the two backends agree even when the
+    JAX path never materializes a host mask matrix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Callable, Dict, Optional, Sequence, Tuple, Type
+
+import numpy as np
+
+try:  # keep repro.sim importable on numpy-only installs
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..parallel.compat import make_mesh, shard_map
+    HAVE_JAX = True
+    _IMPORT_ERROR: Optional[BaseException] = None
+except Exception as e:  # pragma: no cover - exercised on jax-free installs
+    HAVE_JAX = False
+    _IMPORT_ERROR = e
+
+from ..core import prng as cprng
+from ..core.hbd_models import (BigSwitch, HBDModel, InfiniteHBDModel,
+                               NVLModel, SiPRingModel, TPUv4Model)
+
+_SNAP_AXIS = "snap"
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskGen:
+    """Device-side counter-based mask generation request (no host matrix)."""
+
+    samples: int
+    num_nodes: int
+    fault_ratio: float
+    seed: int
+
+
+# ---------------------------------------------------------------- kernels
+# Each builder returns fn(mask: (W,) bool) -> (faulty (T,), placed (T,))
+# in int32, where W is the raw mask width; the kernel itself clips/pads to
+# the model's node count exactly like HBDModel._clip_masks.
+
+def _clip(mask, n: int):
+    w = mask.shape[0]
+    if w == n:
+        return mask
+    if w > n:
+        return mask[:n]
+    return jnp.concatenate([mask, jnp.zeros(n - w, bool)])
+
+
+def _bigswitch_kernel(model: BigSwitch, tps: Sequence[int]):
+    n, g, total = model.num_nodes, model.gpus_per_node, model.total_gpus
+    tps_a = np.asarray(tps, np.int32)
+
+    def fn(mask):
+        m = _clip(mask, n)
+        faulty = m.sum(dtype=jnp.int32) * g
+        placed = ((total - faulty) // tps_a) * tps_a
+        return jnp.broadcast_to(faulty, placed.shape), placed
+    return fn
+
+
+def _infinitehbd_kernel(model: InfiniteHBDModel, tps: Sequence[int]):
+    n, g, k = model.num_nodes, model.gpus_per_node, model.k
+    closed = model.closed_ring
+    ms = [max(1, int(tp) // g) for tp in tps]
+
+    def fn(mask):
+        m = _clip(mask, n)
+        # a gap of >= K consecutive faults splits the K-hop line; runk marks
+        # every completion of such a run (the component boundaries)
+        cs = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                              jnp.cumsum(m.astype(jnp.int32))])
+        runk = jnp.zeros(n, bool)
+        if n >= k:
+            runk = runk.at[k - 1:].set((cs[k:] - cs[:n - k + 1]) == k)
+        healthy = ~m
+        # scan-only component sizing (no scatter/searchsorted, which XLA CPU
+        # serializes): for each node, the healthy-prefix count at its
+        # component's start (forward cummax over boundary-tagged prefixes)
+        # and end (reverse cummin) give its in-component rank and size
+        hc0 = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                               jnp.cumsum(healthy.astype(jnp.int32))])
+        before = hc0[:n]                        # healthy strictly before i
+        comp_start = jax.lax.cummax(jnp.where(runk, before, 0))
+        comp_end = jax.lax.cummin(jnp.where(runk, before, hc0[n]),
+                                  reverse=True)
+        rank = before - comp_start
+        size = comp_end - comp_start
+        if closed:
+            # wrap merge: first and last components join when the
+            # wrap-around fault gap is shorter than K
+            cid = jnp.cumsum(runk.astype(jnp.int32))
+            any_h = healthy.any()
+            first_h = jnp.argmax(healthy)
+            last_h = n - 1 - jnp.argmax(healthy[::-1])
+            s_first, s_last = size[first_h], size[last_h]
+            wrap_gap = first_h + n - last_h - 1
+            merge = any_h & (cid[first_h] != cid[last_h]) & (wrap_gap < k)
+        placed = []
+        for mm in ms:
+            # node is placed iff its m-block completes within the component
+            nodes = (healthy
+                     & (rank - rank % mm + mm <= size)).sum(dtype=jnp.int32)
+            if closed:
+                delta = (((s_first + s_last) // mm) * mm
+                         - (s_first // mm) * mm - (s_last // mm) * mm)
+                nodes = nodes + jnp.where(merge, delta, 0)
+            placed.append(nodes * g)
+        placed = jnp.stack(placed)
+        return jnp.broadcast_to(cs[-1] * g, placed.shape), placed
+    return fn
+
+
+def _nvl_kernel(model: NVLModel, tps: Sequence[int]):
+    g = model.gpus_per_node
+    npn = model.hbd_gpus // g
+    n_hbd = model.num_nodes // npn
+    spares = int(round(model.hbd_gpus * model.spare_fraction))
+    compute = model.hbd_gpus - spares
+    tps_a = np.asarray(tps, np.int32)
+
+    def fn(mask):
+        m = _clip(mask, model.num_nodes)
+        isle = m[:n_hbd * npn].reshape(n_hbd, npn)
+        f_gpus = isle.sum(axis=1, dtype=jnp.int32) * g
+        avail = jnp.maximum(compute - jnp.maximum(f_gpus - spares, 0), 0)
+        placed = ((avail[:, None] // tps_a) * tps_a).sum(axis=0)
+        return jnp.broadcast_to(f_gpus.sum(), placed.shape), placed
+    return fn
+
+
+def _tpuv4_kernel(model: TPUv4Model, tps: Sequence[int]):
+    g = model.gpus_per_node
+    npc = model.cube_gpus // g
+    n_cubes = model.num_nodes // npc
+    n = model.num_nodes
+
+    def fn(mask):
+        m = _clip(mask, n)
+        cube = m[:n_cubes * npc].reshape(n_cubes, npc)
+        faulty = cube.sum(dtype=jnp.int32) * g
+        healthy_cubes = (~cube.any(axis=1)).sum(dtype=jnp.int32)
+        placed = []
+        for tp in tps:
+            tp = int(tp)
+            if tp <= model.cube_gpus:
+                # static sub-block id grid; tail blocks may overrun into the
+                # neighbor cube (same quirk as the NumPy path) -- clip at N
+                bn = max(1, tp // g)
+                starts = np.arange(0, npc, bn)
+                ids = (np.arange(n_cubes)[:, None, None] * npc
+                       + starts[None, :, None]
+                       + np.arange(bn)[None, None, :])
+                in_range = ids < n
+                f = m[np.minimum(ids, max(n - 1, 0))] & in_range
+                placed.append((~f.any(axis=2)).sum(dtype=jnp.int32) * tp)
+            else:
+                placed.append((healthy_cubes * model.cube_gpus // tp) * tp)
+        placed = jnp.stack(placed)
+        return jnp.broadcast_to(faulty, placed.shape), placed
+    return fn
+
+
+def _sipring_kernel(model: SiPRingModel, tps: Sequence[int]):
+    g, n = model.gpus_per_node, model.num_nodes
+
+    def fn(mask):
+        m = _clip(mask, n)
+        faulty, placed = [], []
+        for tp in tps:
+            tp = int(tp)
+            npr = max(1, tp // g)
+            n_rings = n // npr
+            rings = m[:n_rings * npr].reshape(n_rings, npr)
+            placed.append((~rings.any(axis=1)).sum(dtype=jnp.int32) * tp)
+            faulty.append(rings.sum(dtype=jnp.int32) * g)
+        return jnp.stack(faulty), jnp.stack(placed)
+    return fn
+
+
+_KERNELS: Dict[Type[HBDModel], Callable] = {
+    BigSwitch: _bigswitch_kernel,
+    InfiniteHBDModel: _infinitehbd_kernel,
+    NVLModel: _nvl_kernel,
+    TPUv4Model: _tpuv4_kernel,
+    SiPRingModel: _sipring_kernel,
+}
+
+
+def _model_key(model: HBDModel) -> Tuple:
+    """Static identity of a model's compiled kernel (for the jit cache)."""
+    base = (type(model).__name__, model.num_nodes, model.gpus_per_node)
+    if type(model) is InfiniteHBDModel:
+        return base + (model.k, model.closed_ring)
+    if type(model) is NVLModel:
+        return base + (model.hbd_gpus, model.spare_fraction)
+    if type(model) is TPUv4Model:
+        return base + (model.cube_gpus,)
+    return base
+
+
+def available_for(models: Sequence[HBDModel]) -> bool:
+    """True when JAX is importable and every model has a jnp kernel."""
+    return HAVE_JAX and all(type(m) in _KERNELS for m in models)
+
+
+def require(models: Sequence[HBDModel]) -> None:
+    if not HAVE_JAX:
+        raise RuntimeError(
+            f"backend='jax' requested but jax is unavailable ({_IMPORT_ERROR!r})")
+    missing = [m.name for m in models if type(m) not in _KERNELS]
+    if missing:
+        raise RuntimeError(
+            f"backend='jax' has no kernel for model(s) {missing}; "
+            f"use backend='numpy'")
+
+
+# ------------------------------------------------------------- grid runner
+
+def device_draws_canonical() -> bool:
+    """True when ``jax.random.bits`` produces the canonical (original,
+    non-partitionable) threefry layout that ``repro.core.prng`` pins the
+    counter stream to.  When a JAX release flips the
+    ``jax_threefry_partitionable`` default, the engine falls back to
+    host-mirror mask generation rather than silently changing streams."""
+    if not HAVE_JAX:
+        return False
+    flag = getattr(jax.config, "jax_threefry_partitionable", None)
+    # fail closed: if the flag is gone (a future release dropping the
+    # original layout), assume the device stream is no longer canonical
+    return flag is not None and not bool(flag)
+
+
+def _counter_mask(gen: MaskGen, idx):
+    """One snapshot's fault mask from the counter stream, on device.
+
+    The single source of the ``jax.random`` draw scheme -- shared by the
+    fused sweep path and :func:`counter_masks_device` so the production
+    sweep can never desynchronize from what the equivalence tests (and the
+    NumPy mirror ``repro.core.prng.counter_fault_masks``) validate.
+    """
+    thresh = cprng.ratio_threshold(gen.fault_ratio)
+    if thresh >= (1 << 32):
+        return jnp.ones(gen.num_nodes, bool)
+    rk = jax.random.fold_in(
+        jax.random.PRNGKey(gen.seed, impl="threefry2x32"), idx)
+    bits = jax.random.bits(rk, (gen.num_nodes,), jnp.uint32)
+    return bits < jnp.uint32(thresh)
+
+
+_GRID_CACHE: Dict[Tuple, Callable] = {}
+
+
+def _mesh():
+    devs = jax.devices()
+    if len(devs) > 1:
+        return make_mesh((len(devs),), (_SNAP_AXIS,))
+    return None
+
+
+def _grid_fn(models: Sequence[HBDModel], tps: Sequence[int], mesh,
+             gen: Optional[MaskGen], width: int) -> Callable:
+    """Jitted ``(rows, W) bool -> (rows, A, 2, T) int32`` grid evaluator.
+
+    With ``gen`` set the argument is instead a ``(rows,) int32`` vector of
+    snapshot indices and masks are drawn on device via ``jax.random``.
+
+    Cached on the models' static configuration so repeated sweeps (and the
+    benchmark's warm-up + timed call) reuse one compiled executable.
+    """
+    key = (tuple(_model_key(m) for m in models),
+           tuple(int(t) for t in tps), width,
+           None if mesh is None else mesh.devices.size,
+           None if gen is None else (gen.num_nodes,
+                                     cprng.ratio_threshold(gen.fault_ratio),
+                                     gen.seed))
+    fn = _GRID_CACHE.get(key)
+    if fn is not None:
+        return fn
+
+    kernels = [_KERNELS[type(m)](m, tps) for m in models]
+
+    def eval_mask(mask):
+        return jnp.stack([jnp.stack(kfn(mask)) for kfn in kernels])
+
+    if gen is None:
+        per_snapshot = eval_mask
+    else:
+        def per_snapshot(idx):
+            return eval_mask(_counter_mask(gen, idx))
+
+    batched = jax.vmap(per_snapshot)
+    if mesh is not None:
+        batched = shard_map(batched, mesh=mesh,
+                            in_specs=P(_SNAP_AXIS), out_specs=P(_SNAP_AXIS))
+    fn = jax.jit(batched, donate_argnums=0)
+    _GRID_CACHE[key] = fn
+    return fn
+
+
+def _zero_snapshot_totals(models: Sequence[HBDModel],
+                          tps: Sequence[int]) -> np.ndarray:
+    """Per-model ``total_gpus`` rows, from the NumPy kernels on an empty
+    snapshot batch -- guaranteed identical to the NumPy engine's totals."""
+    return np.stack([
+        np.asarray(m.evaluate_batch(np.zeros((0, m.num_nodes), bool),
+                                    tps).total_gpus, dtype=np.int64)
+        for m in models])
+
+
+def sweep_grids(models: Sequence[HBDModel], tps: Sequence[int], *,
+                masks: Optional[np.ndarray] = None,
+                gen: Optional[MaskGen] = None,
+                chunk_snapshots: int = 1024) -> Tuple[np.ndarray, np.ndarray,
+                                                      np.ndarray]:
+    """Evaluate the grid on device; returns int64 (total, faulty, placed).
+
+    Exactly one of ``masks`` (host snapshot matrix) and ``gen``
+    (device-side counter generation) must be provided.
+    """
+    if (masks is None) == (gen is None):
+        raise ValueError("provide exactly one of masks= and gen=")
+    if masks is not None:
+        masks = np.asarray(masks, dtype=bool)
+        snaps, width = masks.shape
+    else:
+        snaps, width = gen.samples, gen.num_nodes
+
+    a_count, t_count = len(models), len(tps)
+    total = np.zeros((a_count, t_count), dtype=np.int64)
+    faulty = np.zeros((a_count, snaps, t_count), dtype=np.int64)
+    placed = np.zeros((a_count, snaps, t_count), dtype=np.int64)
+    if snaps == 0:  # NumPy engine's zero-snapshot grid keeps totals at zero
+        return total, faulty, placed
+    total[:] = _zero_snapshot_totals(models, tps)
+
+    mesh = _mesh()
+    ndev = 1 if mesh is None else mesh.devices.size
+    chunk = max(1, chunk_snapshots)
+    chunk = -(-chunk // ndev) * ndev           # multiple of the device count
+    fn = _grid_fn(models, tps, mesh, gen, width)
+    sharding = (None if mesh is None
+                else NamedSharding(mesh, P(_SNAP_AXIS)))
+
+    for lo in range(0, snaps, chunk):
+        hi = min(lo + chunk, snaps)
+        rows = hi - lo
+        padded = -(-rows // ndev) * ndev       # pad the tail chunk only
+        if masks is not None:
+            block = masks[lo:hi]
+            if padded != rows:
+                block = np.concatenate(
+                    [block, np.zeros((padded - rows, width), bool)])
+        else:
+            block = np.arange(lo, lo + padded, dtype=np.int32)
+        # one transfer straight into the sharded layout (device_put from
+        # host numpy) -- no intermediate full copy on the default device
+        arg = (jnp.asarray(block) if sharding is None
+               else jax.device_put(block, sharding))
+        with warnings.catch_warnings():
+            # bool/int32 donation can't alias int32 outputs; the donation
+            # still releases the chunk buffer eagerly, which is the point
+            warnings.filterwarnings("ignore", message=".*onat.*buffer.*")
+            out = np.asarray(fn(arg))          # (padded, A, 2, T)
+        faulty[:, lo:hi] = out[:rows, :, 0].transpose(1, 0, 2)
+        placed[:, lo:hi] = out[:rows, :, 1].transpose(1, 0, 2)
+    return total, faulty, placed
+
+
+def counter_masks_device(gen: MaskGen) -> np.ndarray:
+    """Device-side ``jax.random`` mask generation (for tests/tools): the
+    exact per-snapshot draw the fused sweep uses (shared
+    :func:`_counter_mask`), returned as a host bool matrix.  Bit-identical
+    to ``repro.core.prng.counter_fault_masks``."""
+    if not HAVE_JAX:
+        raise RuntimeError(f"jax unavailable ({_IMPORT_ERROR!r})")
+    if not device_draws_canonical():
+        raise RuntimeError(
+            "jax_threefry_partitionable is enabled: device draws would not "
+            "match the canonical counter stream; use "
+            "repro.core.prng.counter_fault_masks instead")
+    if gen.samples == 0 or gen.num_nodes == 0:
+        return np.zeros((gen.samples, gen.num_nodes), bool)
+    idxs = jnp.arange(gen.samples, dtype=jnp.int32)
+    fn = jax.jit(jax.vmap(lambda idx: _counter_mask(gen, idx)))
+    return np.asarray(fn(idxs))
+
+
+def num_devices() -> int:
+    return len(jax.devices()) if HAVE_JAX else 0
+
+
+__all__ = [
+    "HAVE_JAX", "MaskGen", "available_for", "require", "sweep_grids",
+    "counter_masks_device", "num_devices",
+]

@@ -25,6 +25,7 @@ import numpy as np
 
 from ..core.hbd_models import (BigSwitch, HBDModel, InfiniteHBDModel,
                                NVLModel, SiPRingModel, TPUv4Model)
+from ..core.prng import counter_fault_masks
 from ..core.trace import generate_trace, iid_fault_masks, to_4gpu_trace
 
 ModelFactory = Callable[[int, int], HBDModel]
@@ -80,7 +81,7 @@ class TraceSnapshots:
 
 @dataclasses.dataclass(frozen=True)
 class IIDSnapshots:
-    """I.i.d. snapshots at a fixed node-fault ratio."""
+    """I.i.d. snapshots at a fixed node-fault ratio (NumPy PCG64 stream)."""
 
     fault_ratio: float
     samples: int = 20
@@ -89,6 +90,27 @@ class IIDSnapshots:
     def masks(self, num_nodes: int) -> np.ndarray:
         return iid_fault_masks(num_nodes, self.fault_ratio, self.samples,
                                self.seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class CounterIIDSnapshots:
+    """I.i.d. snapshots from the counter-based threefry stream.
+
+    Unlike :class:`IIDSnapshots` (NumPy PCG64), this source is
+    seed-compatible across compute backends: snapshot ``i`` is drawn from
+    ``fold_in(key(seed), i)``, so the JAX backend regenerates the identical
+    masks *on device* with ``jax.random`` (never materializing a host
+    matrix) while the NumPy backend uses the bit-exact mirror in
+    :mod:`repro.core.prng`.  Preferred for million-snapshot sweeps.
+    """
+
+    fault_ratio: float
+    samples: int = 20
+    seed: int = 0
+
+    def masks(self, num_nodes: int) -> np.ndarray:
+        return counter_fault_masks(num_nodes, self.fault_ratio, self.samples,
+                                   self.seed)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -2,9 +2,11 @@
 
 Each helper returns a list of plain dict rows (one per architecture x TP
 combination) so callers can print CSV, assert on values, or feed plotting.
-All reductions match the scalar ``repro.core.fault_sim`` definitions
-bit-for-bit: waste statistics (Fig. 13/14), P5 placeable capacity
-(Fig. 15), and fault-waiting share (Fig. 16/23).
+The actual reductions live in :mod:`repro.core.reductions` -- one
+implementation shared with the batched ``repro.core.fault_sim`` wrappers,
+matching the scalar definitions bit-for-bit: waste statistics
+(Fig. 13/14), P5 placeable capacity (Fig. 15), and fault-waiting share
+(Fig. 16/23).
 """
 
 from __future__ import annotations
@@ -12,8 +14,8 @@ from __future__ import annotations
 import io
 from typing import Dict, List, Sequence
 
-import numpy as np
-
+from ..core.reductions import (percentile_capacity, waiting_share,
+                               waste_stats)
 from .engine import SweepResult
 
 
@@ -23,12 +25,10 @@ def waste_table(result: SweepResult) -> List[Dict]:
     rows = []
     for ai, name in enumerate(result.names):
         for ti, tp in enumerate(result.tp_sizes):
-            series = waste[ai, :, ti]
+            mean, p50, p99 = waste_stats(waste[ai, :, ti])
             rows.append({
                 "architecture": name, "tp_size": int(tp),
-                "mean_waste": float(series.mean()),
-                "p50_waste": float(np.percentile(series, 50)),
-                "p99_waste": float(np.percentile(series, 99)),
+                "mean_waste": mean, "p50_waste": p50, "p99_waste": p99,
             })
     return rows
 
@@ -39,8 +39,8 @@ def max_job_table(result: SweepResult, percentile: float = 5.0) -> List[Dict]:
     rows = []
     for ai, name in enumerate(result.names):
         for ti, tp in enumerate(result.tp_sizes):
-            cap = result.placed_gpus[ai, :, ti].astype(float)
-            gpus = float(np.percentile(cap, percentile))
+            gpus = percentile_capacity(result.placed_gpus[ai, :, ti],
+                                       percentile)
             total = int(result.total_gpus[ai, ti])
             rows.append({
                 "architecture": name, "tp_size": int(tp),
@@ -54,7 +54,6 @@ def fault_waiting_table(result: SweepResult,
                         job_gpus: Sequence[int]) -> List[Dict]:
     """Per (architecture, TP, job size): share of snapshots during which the
     job cannot run because placeable capacity < requirement (Fig. 16/23)."""
-    snaps = result.num_snapshots
     rows = []
     for ai, name in enumerate(result.names):
         for ti, tp in enumerate(result.tp_sizes):
@@ -63,8 +62,7 @@ def fault_waiting_table(result: SweepResult,
                 rows.append({
                     "architecture": name, "tp_size": int(tp),
                     "job_gpus": int(jg),
-                    "waiting_share": float((placed < jg).sum() / snaps)
-                    if snaps else 0.0,
+                    "waiting_share": waiting_share(placed, jg),
                 })
     return rows
 

@@ -1,0 +1,56 @@
+"""JAX-backend equivalence under forced multi-device sharding.
+
+Run in a subprocess (XLA_FLAGS set before jax import) so the main pytest
+process keeps one device.  Prints 'OK jax_backend_sharded' on success.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+from repro.sim import (CounterIIDSnapshots, IIDSnapshots, ScenarioSpec,  # noqa: E402
+                       TraceSnapshots, run_sweep)
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+
+    # trace-sourced masks over the full default suite, odd chunk sizes so
+    # chunks land on non-device-aligned boundaries and the tail pads
+    spec = ScenarioSpec(num_nodes=300,
+                        snapshots=TraceSnapshots(trace_nodes=170, samples=93,
+                                                 seed=4),
+                        tp_sizes=(8, 32, 48))
+    ref = run_sweep(spec, backend="numpy")
+    for chunk in (17, 64, 4096):
+        got = run_sweep(spec, backend="jax", chunk_snapshots=chunk)
+        assert got.backend == "jax"
+        assert np.array_equal(got.total_gpus, ref.total_gpus)
+        assert np.array_equal(got.faulty_gpus, ref.faulty_gpus)
+        assert np.array_equal(got.placed_gpus, ref.placed_gpus), chunk
+
+    # device-side counter mask generation sharded over 8 devices
+    cspec = ScenarioSpec(num_nodes=257,
+                         snapshots=CounterIIDSnapshots(0.11, samples=77,
+                                                       seed=3),
+                         tp_sizes=(16, 32))
+    cref = run_sweep(cspec, backend="numpy")
+    cgot = run_sweep(cspec, backend="jax", chunk_snapshots=19)
+    assert np.array_equal(cgot.placed_gpus, cref.placed_gpus)
+    assert np.array_equal(cgot.faulty_gpus, cref.faulty_gpus)
+
+    # snapshot count below the device count still shards (pads to 8)
+    tiny = ScenarioSpec(num_nodes=64,
+                        snapshots=IIDSnapshots(0.2, samples=3, seed=0),
+                        tp_sizes=(16,))
+    assert np.array_equal(run_sweep(tiny, backend="jax").placed_gpus,
+                          run_sweep(tiny, backend="numpy").placed_gpus)
+
+    print("OK jax_backend_sharded")
+
+
+if __name__ == "__main__":
+    main()
