@@ -1,13 +1,14 @@
 """Benchmark driver: one section per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--smoke] [--backend B]
-                                          [--snapshots N] [section ...]
+                                          [--snapshots N] [--traces R]
+                                          [section ...]
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--smoke`` asks each section
 for a shrunken grid (CI-sized: seconds, not minutes); ``--backend`` /
-``--snapshots`` are forwarded to sections that accept them (the sweep
-section's engine matrix and scale knob); sections that predate the flags
-run unchanged.
+``--snapshots`` / ``--traces`` are forwarded to sections that accept them
+(the sweep/churn sections' engine matrices and scale knobs); sections that
+predate the flags run unchanged.
 """
 
 from __future__ import annotations
@@ -17,9 +18,9 @@ import inspect
 import sys
 import traceback
 
-SECTIONS = ("waste_ratio", "max_job", "fault_waiting", "sweep", "mfu_tables",
-            "orchestration", "cost", "collectives_bench", "kernels_bench",
-            "roofline")
+SECTIONS = ("waste_ratio", "max_job", "fault_waiting", "sweep", "churn",
+            "mfu_tables", "orchestration", "cost", "collectives_bench",
+            "kernels_bench", "roofline")
 
 
 def main() -> None:
@@ -28,11 +29,12 @@ def main() -> None:
     parser.add_argument("--backend", choices=("numpy", "jax", "both"),
                         default=None)
     parser.add_argument("--snapshots", type=int, default=None)
+    parser.add_argument("--traces", type=int, default=None)
     parser.add_argument("sections", nargs="*", default=[])
     args = parser.parse_args()
     want = args.sections or list(SECTIONS)
     forwardable = {"smoke": args.smoke, "backend": args.backend,
-                   "snapshots": args.snapshots}
+                   "snapshots": args.snapshots, "traces": args.traces}
     print("name,us_per_call,derived")
     failed = []
     for name in want:

@@ -1,0 +1,47 @@
+"""Trace -> timeline -> Fig. 18 latency table -> MFU delta, end to end.
+
+One Appendix-A fault trace replayed through the churn subsystem: the
+time-integrated waste per architecture, the reconfiguration-latency
+distribution across growing cluster sizes (node-level isolation: the
+distribution does not move), and the end-to-end training-throughput
+retention from the MFU bridge.  The 2,080-GPU cluster sits just above the
+TP-32 x DP-64 power-of-two boundary, so fragmentation costs a full elastic
+DP halving -- the regime where HBD architectures actually separate.
+
+Run:  PYTHONPATH=src python examples/churn_replay.py
+"""
+
+from repro.churn import (ChurnJob, ChurnSpec, control_plane_replay,
+                         integrated_waste_table, latency_table, replay_trace,
+                         timeline_mfu_table)
+
+ARCHES = ("dgx-h100", "tpuv4", "nvl-72", "sip-ring", "infinitehbd-k3")
+spec = ChurnSpec(trace_nodes=260, horizon_h=45 * 24.0, tp_sizes=(32,),
+                 architectures=ARCHES, seed=1)       # 520 nodes, 2080 GPUs
+
+timeline = replay_trace(spec.trace(0), tp_sizes=spec.tp_sizes,
+                        architectures=ARCHES)
+print(f"== 45-day replay, {spec.num_nodes * 4} GPUs, "
+      f"{timeline.num_intervals} fault intervals ==")
+for r in integrated_waste_table(timeline):
+    print(f"  tp32 {r['architecture']:<15} time-mean waste "
+          f"{r['time_mean_waste']:6.2%}   goodput {r['goodput_gpu_h']:>9.0f} "
+          f"GPU-h ({r['placed_share']:.1%})")
+
+print("== Fig. 18: reconfiguration latency vs cluster size ==")
+records = {}
+for trace_nodes in (65, 130, 260):
+    trace = ChurnSpec(trace_nodes=trace_nodes, horizon_h=10 * 24.0,
+                      seed=2).trace(0)
+    records[f"{trace.num_nodes * 4:>5} GPUs"] = control_plane_replay(
+        trace, ChurnJob(tp_size=32, dp_size=16), max_events=60)
+for r in latency_table(records):
+    print(f"  {r['label']}: {r['reconfigs']} reconfigs, "
+          f"p50 {r['p50_us']:.0f}us  p99 {r['p99_us']:.0f}us  "
+          f"max {r['max_us']:.0f}us")
+
+print("== time-integrated MFU, llama-3.1-405B @ TP-32 (elastic pow2 DP) ==")
+for r in timeline_mfu_table(timeline, tp=32):
+    print(f"  {r['architecture']:<15} MFU {r['integrated_mfu']:.4f} / ideal "
+          f"{r['ideal_mfu']:.4f}  -> retention {r['retention']:6.1%}   "
+          f"unschedulable {r['unschedulable_share']:.1%}")

@@ -1,0 +1,31 @@
+"""Trace-driven cluster-lifetime simulation: fault events -> MFU.
+
+The layer between the snapshot scenario engine (``repro.sim``) and the
+training runtime: replay whole :class:`~repro.core.trace.FaultTrace` event
+streams -- not i.i.d. snapshots -- through the HBD models and the control
+plane, and reduce the resulting timelines to the paper's *temporal*
+resiliency claims (Fig. 18 reconfiguration-latency distributions,
+time-integrated waste, and end-to-end MFU deltas per architecture).
+
+Typical use::
+
+    from repro.churn import ChurnSpec, monte_carlo_replay, replay_trace
+
+    spec = ChurnSpec(trace_nodes=400, tp_sizes=(32,))
+    timeline = replay_trace(spec.trace(0), tp_sizes=spec.tp_sizes)
+    ensemble = monte_carlo_replay(spec, traces=1000, backend="jax")
+"""
+
+from .mfu_bridge import elastic_mfu, pow2_floor, timeline_mfu_table
+from .monte_carlo import ChurnEnsemble, ChurnSpec, monte_carlo_replay
+from .replay import ChurnJob, control_plane_replay, replay_trace
+from .timeline import (ChurnTimeline, ReconfigRecord, integrated_waste_table,
+                       latency_table)
+
+__all__ = [
+    "ChurnEnsemble", "ChurnJob", "ChurnSpec", "ChurnTimeline",
+    "ReconfigRecord",
+    "control_plane_replay", "monte_carlo_replay", "replay_trace",
+    "integrated_waste_table", "latency_table",
+    "elastic_mfu", "pow2_floor", "timeline_mfu_table",
+]

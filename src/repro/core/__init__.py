@@ -24,4 +24,5 @@ from .cost_model import (ALL_BOMS, ArchBOM, Component, INFINITEHBD_K2,
                          aggregate_cost, cost_ratio, table6)
 from .mfu_sim import (Cluster, GPT_MOE_1T, LLAMA31_405B, ParallelPlan,
                       SimModel, SimResult, search, simulate)
-from .control_plane import ClusterManager, NodeFabricManager, ReconfigEvent
+from .control_plane import (ClusterManager, ControlPlaneConfig,
+                            NodeFabricManager, ReconfigEvent)

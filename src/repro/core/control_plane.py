@@ -18,7 +18,7 @@ from typing import Callable, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
-from .ocstrx import reconfig_latency_us
+from .ocstrx import RECONFIG_LATENCY_US
 from .placement import InsufficientCapacityError, MeshPlan, plan_mesh
 from .topology import KHopRingTopology, TopologyConfig
 
@@ -29,6 +29,25 @@ HEARTBEAT_INTERVAL_S = 5.0
 HEARTBEAT_MISS_LIMIT = 3
 
 
+@dataclasses.dataclass(frozen=True)
+class ControlPlaneConfig:
+    """Tunable control-plane timing constants.
+
+    Defaults are exactly the historical module constants, so a default
+    config changes nothing; churn sweeps (``repro.churn``) construct
+    variants to study reconfiguration-latency sensitivity.
+    """
+
+    protocol_delay_us: float = PROTOCOL_DELAY_US
+    heartbeat_interval_s: float = HEARTBEAT_INTERVAL_S
+    heartbeat_miss_limit: int = HEARTBEAT_MISS_LIMIT
+    reconfig_latency_us: Tuple[float, float] = RECONFIG_LATENCY_US
+
+    @property
+    def heartbeat_timeout_s(self) -> float:
+        return self.heartbeat_interval_s * self.heartbeat_miss_limit
+
+
 @dataclasses.dataclass
 class NodeFabricManager:
     """Per-node agent: configures local OCSTrx, reports health."""
@@ -36,6 +55,8 @@ class NodeFabricManager:
     node_id: int
     topo: KHopRingTopology
     last_heartbeat_s: float = 0.0
+    config: ControlPlaneConfig = dataclasses.field(
+        default_factory=ControlPlaneConfig)
 
     def heartbeat(self, now_s: float) -> None:
         self.last_heartbeat_s = now_s
@@ -44,11 +65,12 @@ class NodeFabricManager:
         if self.node_id in self.topo.faulty:
             return False
         return (now_s - self.last_heartbeat_s
-                < HEARTBEAT_INTERVAL_S * HEARTBEAT_MISS_LIMIT)
+                < self.config.heartbeat_timeout_s)
 
     def apply_segment(self, segment, now_us: float = 0.0, rng=None) -> float:
         """Drive this node's transceivers for a ring segment it belongs to."""
-        return self.topo.activate_segment(segment, now_us, rng)
+        return self.topo.activate_segment(
+            segment, now_us, rng, latency_range=self.config.reconfig_latency_us)
 
 
 @dataclasses.dataclass
@@ -65,9 +87,11 @@ class ClusterManager:
 
     def __init__(self, num_nodes: int, gpus_per_node: int = 4, k: int = 3,
                  nodes_per_tor: int = 8, agg_domain: int = 64, seed: int = 0,
-                 incremental: bool = True):
+                 incremental: bool = True,
+                 config: Optional[ControlPlaneConfig] = None):
         from .orchestrator import deployment_strategy
         self.cfg = TopologyConfig(num_nodes, gpus_per_node, k)
+        self.config = config if config is not None else ControlPlaneConfig()
         # the topology graph lives in HBD-position space (deployment order)
         self.topo = KHopRingTopology(self.cfg)
         self.dep = deployment_strategy(num_nodes, nodes_per_tor)
@@ -75,7 +99,7 @@ class ClusterManager:
         self.k = k
         self.nodes_per_tor = nodes_per_tor
         self.agg_domain = agg_domain
-        self.fabric = {u: NodeFabricManager(u, self.topo)
+        self.fabric = {u: NodeFabricManager(u, self.topo, config=self.config)
                        for u in range(num_nodes)}
         self.rng = np.random.default_rng(seed)
         self.log: List[ReconfigEvent] = []
@@ -168,12 +192,17 @@ class ClusterManager:
                 f"cluster cannot host even TP={tp_size} x DP=1 after {kind}")
 
         # Settle time: every affected segment reconfigures in parallel; the
-        # hardware switch is 60-80us + protocol-layer delay.
-        settle_us = 0.0
+        # hardware switch is 60-80us + protocol-layer delay.  Switches start
+        # at the event time (not sim-time 0) so a transceiver's busy window
+        # from an earlier event never bleeds into this one's latency.
+        now_us = now_s * 1e6
+        settle_us = now_us
         for seg in plan.segments_pos:
-            settle_us = max(settle_us,
-                            self.topo.activate_segment(seg, 0.0, self.rng))
-        settle_s = now_s + (settle_us + PROTOCOL_DELAY_US) / 1e6
+            settle_us = max(settle_us, self.topo.activate_segment(
+                seg, now_us, self.rng,
+                latency_range=self.config.reconfig_latency_us))
+        settle_s = now_s + (settle_us - now_us
+                            + self.config.protocol_delay_us) / 1e6
         ev = ReconfigEvent(now_s, kind, nodes, plan, settle_s)
         self.log.append(ev)
         self.current_plan = plan

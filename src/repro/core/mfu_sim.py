@@ -218,7 +218,7 @@ def _pow2s(lo: int, hi: int) -> List[int]:
 def search(model: SimModel, cluster: Cluster, global_batch: int = 2048,
            tps: Iterable[int] = None, pps: Iterable[int] = None,
            eps: Iterable[int] = (1,), imbalance: float = 0.0,
-           vpp: int = 1) -> Optional[SimResult]:
+           vpp: int = 1, max_dp: int = 1024) -> Optional[SimResult]:
     """Grid-search the best plan (the paper's footnote 6 search space)."""
     tps = list(tps) if tps else _pow2s(1, 128)
     pps = list(pps) if pps else _pow2s(1, 16)
@@ -228,7 +228,7 @@ def search(model: SimModel, cluster: Cluster, global_batch: int = 2048,
             if cluster.gpus % (t * pp):
                 continue
             d = cluster.gpus // (t * pp)
-            if d > 1024:
+            if d > max_dp:
                 continue
             for e in eps:
                 res = simulate(model, cluster, ParallelPlan(t, pp, d, e, vpp),

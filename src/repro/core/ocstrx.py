@@ -17,7 +17,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
-from typing import Optional
+from typing import Optional, Tuple
 
 
 class Path(enum.Enum):
@@ -42,9 +42,14 @@ BANDWIDTH_GBPS = 800.0                   # nominal module bandwidth
 UNIT_COST_USD = 600.0                    # Table 8 BOM line
 
 
-def reconfig_latency_us(rng=None) -> float:
-    """Sample a hardware reconfiguration latency (uniform over measured range)."""
-    lo, hi = RECONFIG_LATENCY_US
+def reconfig_latency_us(rng=None,
+                        latency_range: Optional[Tuple[float, float]] = None) -> float:
+    """Sample a hardware reconfiguration latency (uniform over measured range).
+
+    ``latency_range`` overrides the paper's 60-80us measurement -- churn
+    sweeps vary it through :class:`repro.core.control_plane.ControlPlaneConfig`.
+    """
+    lo, hi = latency_range if latency_range is not None else RECONFIG_LATENCY_US
     if rng is None:
         return 0.5 * (lo + hi)
     return float(rng.uniform(lo, hi))
@@ -90,7 +95,8 @@ class OCSTrx:
     reconfig_count: int = 0
     busy_until_us: float = 0.0  # sim-time until which the switch is settling
 
-    def switch(self, path: Path, now_us: float = 0.0, rng=None) -> float:
+    def switch(self, path: Path, now_us: float = 0.0, rng=None,
+               latency_range: Optional[Tuple[float, float]] = None) -> float:
         """Request a path switch.  Returns the sim-time at which the new path
         is live.  Raises if the module has failed."""
         if self.failed:
@@ -98,7 +104,7 @@ class OCSTrx:
         if path is self.active:
             return max(now_us, self.busy_until_us)
         start = max(now_us, self.busy_until_us)
-        done = start + reconfig_latency_us(rng)
+        done = start + reconfig_latency_us(rng, latency_range)
         self.active = path
         self.reconfig_count += 1
         self.busy_until_us = done
@@ -138,11 +144,13 @@ class OCSTrxBundle:
         if self.modules is None:
             self.modules = [OCSTrx(f"{self.bundle_id}.{i}") for i in range(self.width)]
 
-    def switch_all(self, path: Path, now_us: float = 0.0, rng=None) -> float:
+    def switch_all(self, path: Path, now_us: float = 0.0, rng=None,
+                   latency_range: Optional[Tuple[float, float]] = None) -> float:
         """Switch every module in the bundle; returns the last settle time.
         Modules switch in parallel so the bundle latency equals the max."""
-        return max(m.switch(path, now_us, rng) for m in self.modules
-                   if not m.failed) if any(not m.failed for m in self.modules) else now_us
+        return max(m.switch(path, now_us, rng, latency_range)
+                   for m in self.modules if not m.failed) \
+            if any(not m.failed for m in self.modules) else now_us
 
     @property
     def healthy(self) -> bool:

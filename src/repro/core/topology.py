@@ -143,14 +143,16 @@ class KHopRingTopology:
         return plan
 
     def activate_segment(self, segment: Sequence[int], now_us: float = 0.0,
-                         rng=None) -> float:
+                         rng=None,
+                         latency_range: Optional[Tuple[float, float]] = None) -> float:
         """Drive OCSTrx state for a node segment forming one TP ring.
 
         Interior nodes activate the two external paths toward their segment
         neighbors; the two end nodes activate one external path and the
         cross-lane loopback (closing the GPU ring).  Returns the sim time at
         which every involved transceiver has settled -- the topology-level
-        reconfiguration latency.
+        reconfiguration latency.  ``latency_range`` overrides the per-switch
+        hardware latency (see ``ControlPlaneConfig``).
         """
         settle = now_us
         plan = self.bypass_plan(segment)
@@ -159,13 +161,14 @@ class KHopRingTopology:
             bv = self.bundles[v][d - 1]
             # primary neighbor rides EXT1, bypass links ride EXT2
             path = Path.EXT1 if d == 1 else Path.EXT2
-            settle = max(settle, bu.switch_all(path, now_us, rng))
-            settle = max(settle, bv.switch_all(path, now_us, rng))
+            settle = max(settle, bu.switch_all(path, now_us, rng, latency_range))
+            settle = max(settle, bv.switch_all(path, now_us, rng, latency_range))
         for end in (segment[0], segment[-1]):
             # remaining bundles at the ends close the ring via loopback
             for b in self.bundles[end][1:]:
                 if b.healthy:
-                    settle = max(settle, b.switch_all(Path.LOOPBACK, now_us, rng))
+                    settle = max(settle, b.switch_all(Path.LOOPBACK, now_us,
+                                                      rng, latency_range))
         return settle
 
     # ------------------------------------------------------------- GPU rings

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Iterator, List, Sequence, Set, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -73,12 +73,57 @@ class FaultTrace:
         i1 = np.searchsorted(ts, ends, side="left")
         # int16 + in-place cumsum keeps the peak footprint at ~2x the bool
         # mask even for 100k-node x multi-thousand-snapshot grids (the count
-        # is concurrently-active events per node, far below the int16 range)
-        delta = np.zeros((len(ts) + 1, self.num_nodes), dtype=np.int16)
-        np.add.at(delta, (i0, nodes), 1)
-        np.add.at(delta, (i1, nodes), -1)
-        np.cumsum(delta[:-1], axis=0, out=delta[:-1])
-        return delta[:-1] > 0
+        # is concurrently-active events per node, far below the int16 range);
+        # the (node, time) layout makes the cumsum contiguous (~4x faster
+        # than accumulating down the snapshot axis)
+        delta = np.zeros((self.num_nodes, len(ts) + 1), dtype=np.int16)
+        np.add.at(delta, (nodes, i0), 1)
+        np.add.at(delta, (nodes, i1), -1)
+        np.cumsum(delta[:, :-1], axis=1, out=delta[:, :-1])
+        out = np.empty((len(ts), self.num_nodes), dtype=bool)
+        np.greater(delta[:, :-1].T, 0, out=out)    # one C-ordered allocation
+        return out
+
+    def interval_edges(self) -> np.ndarray:
+        """Left edges of the piecewise-constant fault-set intervals.
+
+        ``edges[0] == 0.0`` and every event start/end inside ``(0,
+        horizon_h)`` contributes an edge, so ``faulty_at`` is constant on
+        ``[edges[i], edges[i+1])`` and on the final ``[edges[-1],
+        horizon_h)``.  ``fault_masks(interval_edges())`` is therefore the
+        exact per-interval occupancy matrix of the trace -- the snapshot
+        axis of the churn replay (``repro.churn``).
+        """
+        ts = {0.0}
+        for e in self.events:
+            if 0.0 < e.start_h < self.horizon_h:
+                ts.add(e.start_h)
+            if 0.0 < e.end_h < self.horizon_h:
+                ts.add(e.end_h)
+        return np.array(sorted(ts), dtype=np.float64)
+
+    def interval_durations(self, edges: Optional[np.ndarray] = None) -> np.ndarray:
+        """Durations (hours) of the intervals whose left edges are ``edges``."""
+        edges = self.interval_edges() if edges is None else np.asarray(edges)
+        return np.diff(np.append(edges, self.horizon_h))
+
+    def event_deltas(self) -> List[Tuple[float, int, int]]:
+        """Time-sorted ``(time_h, node, +1/-1)`` occupancy deltas.
+
+        Fault events may overlap on one node (background + burst), so the
+        event-by-event replay tracks a per-node active-event *count*; a node
+        is faulty at ``t`` iff its count is positive once every delta with
+        ``time <= t`` has been applied -- identical to ``faulty_at(t)``.
+        Ends clipped at the horizon emit no delta (they never fire inside
+        the trace window).
+        """
+        deltas: List[Tuple[float, int, int]] = []
+        for e in self.events:
+            deltas.append((e.start_h, e.node, +1))
+            if e.end_h < self.horizon_h:
+                deltas.append((e.end_h, e.node, -1))
+        deltas.sort(key=lambda d: d[0])
+        return deltas
 
     def fault_ratio_series(self, num: int = 500) -> np.ndarray:
         ts = self.sample_times(num)

@@ -12,15 +12,15 @@ Typical use::
         print(row)
 """
 
-from .engine import (BACKENDS, SweepResult, resolve_backend, run_sweep,
-                     run_sweep_scalar)
+from .engine import (BACKENDS, SweepResult, evaluate_masks, resolve_backend,
+                     run_sweep, run_sweep_scalar)
 from .scenario import (CounterIIDSnapshots, DEFAULT_ARCHITECTURES,
                        IIDSnapshots, MODEL_REGISTRY, ScenarioSpec,
                        TraceSnapshots, make_model)
 from .tables import fault_waiting_table, max_job_table, to_csv, waste_table
 
 __all__ = [
-    "SweepResult", "run_sweep", "run_sweep_scalar",
+    "SweepResult", "run_sweep", "run_sweep_scalar", "evaluate_masks",
     "BACKENDS", "resolve_backend",
     "ScenarioSpec", "TraceSnapshots", "IIDSnapshots", "CounterIIDSnapshots",
     "MODEL_REGISTRY", "DEFAULT_ARCHITECTURES", "make_model",

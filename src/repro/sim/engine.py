@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -101,6 +101,46 @@ class SweepResult:
         return int(np.nonzero(self.tp_sizes == tp)[0][0])
 
 
+def evaluate_masks(models: Sequence[HBDModel], tp_sizes: Sequence[int],
+                   masks: np.ndarray, *, chunk_snapshots: int = 1024,
+                   backend: str = "auto") -> Tuple[np.ndarray, np.ndarray,
+                                                   np.ndarray, str]:
+    """Evaluate a pre-materialized ``(snapshots, nodes)`` mask matrix.
+
+    The mask-in/grids-out core shared by :func:`run_sweep` and the churn
+    replay engine (``repro.churn``): every model's batched kernel over every
+    snapshot x TP cell, chunked along the snapshot axis.  Returns int64
+    ``(total (A, T), faulty (A, S, T), placed (A, S, T), backend)`` grids,
+    bit-for-bit identical across backends.
+    """
+    chosen = resolve_backend(backend, models)
+    masks = np.asarray(masks, dtype=bool)
+    tp_sizes = list(tp_sizes)
+
+    if chosen == "jax":
+        from . import jax_backend
+        total, faulty, placed = jax_backend.sweep_grids(
+            models, tp_sizes, masks=masks, chunk_snapshots=chunk_snapshots)
+        return total, faulty, placed, "jax"
+
+    snaps = masks.shape[0]
+    tcount = len(tp_sizes)
+    total = np.zeros((len(models), tcount), dtype=np.int64)
+    faulty = np.zeros((len(models), snaps, tcount), dtype=np.int64)
+    placed = np.zeros((len(models), snaps, tcount), dtype=np.int64)
+    chunk_snapshots = max(1, chunk_snapshots)     # same clamp as the jax path
+    for lo in range(0, max(snaps, 1), chunk_snapshots):
+        chunk = masks[lo:lo + chunk_snapshots]
+        if not chunk.shape[0]:
+            break
+        for ai, model in enumerate(models):
+            grid = model.evaluate_batch(chunk, tp_sizes)
+            total[ai] = grid.total_gpus
+            faulty[ai, lo:lo + chunk.shape[0]] = grid.faulty_gpus
+            placed[ai, lo:lo + chunk.shape[0]] = grid.placed_gpus
+    return total, faulty, placed, "numpy"
+
+
 def run_sweep(spec: ScenarioSpec, *, masks: Optional[np.ndarray] = None,
               models: Optional[Sequence[HBDModel]] = None,
               chunk_snapshots: int = 1024,
@@ -118,47 +158,28 @@ def run_sweep(spec: ScenarioSpec, *, masks: Optional[np.ndarray] = None,
     tps = np.asarray(spec.tp_sizes, dtype=np.int64)
     chosen = resolve_backend(backend, models)
 
-    if chosen == "jax":
+    if chosen == "jax" and masks is None \
+            and isinstance(spec.snapshots, CounterIIDSnapshots):
         from . import jax_backend
-        gen = None
-        if (masks is None and isinstance(spec.snapshots, CounterIIDSnapshots)
-                and jax_backend.device_draws_canonical()):
+        if jax_backend.device_draws_canonical():
             # counter-based spec: draw the masks on device with jax.random
             # (bit-identical to the host mirror, no host matrix needed)
             gen = jax_backend.MaskGen(spec.snapshots.samples, spec.num_nodes,
                                       spec.snapshots.fault_ratio,
                                       spec.snapshots.seed)
-        if gen is None:
-            if masks is None:
-                masks = spec.snapshots.masks(spec.num_nodes)
-            masks = np.asarray(masks, dtype=bool)
-        total, faulty, placed = jax_backend.sweep_grids(
-            models, spec.tp_sizes, masks=masks, gen=gen,
-            chunk_snapshots=chunk_snapshots)
-        return SweepResult(spec, names, tps, total, faulty, placed,
-                           backend="jax")
+            total, faulty, placed = jax_backend.sweep_grids(
+                models, spec.tp_sizes, gen=gen,
+                chunk_snapshots=chunk_snapshots)
+            return SweepResult(spec, names, tps, total, faulty, placed,
+                               backend="jax")
 
     if masks is None:
         masks = spec.snapshots.masks(spec.num_nodes)
-    masks = np.asarray(masks, dtype=bool)
-    snaps = masks.shape[0]
-    tcount = len(spec.tp_sizes)
-
-    total = np.zeros((len(models), tcount), dtype=np.int64)
-    faulty = np.zeros((len(models), snaps, tcount), dtype=np.int64)
-    placed = np.zeros((len(models), snaps, tcount), dtype=np.int64)
-    chunk_snapshots = max(1, chunk_snapshots)     # same clamp as the jax path
-    for lo in range(0, max(snaps, 1), chunk_snapshots):
-        chunk = masks[lo:lo + chunk_snapshots]
-        if not chunk.shape[0]:
-            break
-        for ai, model in enumerate(models):
-            grid = model.evaluate_batch(chunk, spec.tp_sizes)
-            total[ai] = grid.total_gpus
-            faulty[ai, lo:lo + chunk.shape[0]] = grid.faulty_gpus
-            placed[ai, lo:lo + chunk.shape[0]] = grid.placed_gpus
+    total, faulty, placed, chosen = evaluate_masks(
+        models, spec.tp_sizes, masks, chunk_snapshots=chunk_snapshots,
+        backend=chosen)
     return SweepResult(spec, names, tps, total, faulty, placed,
-                       backend="numpy")
+                       backend=chosen)
 
 
 def run_sweep_scalar(spec: ScenarioSpec, *,

@@ -30,6 +30,15 @@ from ..core.trace import generate_trace, iid_fault_masks, to_4gpu_trace
 
 ModelFactory = Callable[[int, int], HBDModel]
 
+
+def _dgx_model(n: int, g: int) -> NVLModel:
+    """DGX-class 8-GPU NVLink islands, no optical spares (paper §6.3's
+    DGX baseline for the MFU comparison)."""
+    m = NVLModel(n, g, hbd_gpus=8, spare_fraction=0.0)
+    m.name = "dgx-h100"
+    return m
+
+
 MODEL_REGISTRY: Dict[str, ModelFactory] = {
     "big-switch": lambda n, g: BigSwitch(n, g),
     "infinitehbd-k2": lambda n, g: InfiniteHBDModel(n, g, k=2),
@@ -39,10 +48,13 @@ MODEL_REGISTRY: Dict[str, ModelFactory] = {
     "nvl-576": lambda n, g: NVLModel(n, g, hbd_gpus=576, spare_fraction=0.0),
     "tpuv4": lambda n, g: TPUv4Model(n, g),
     "sip-ring": lambda n, g: SiPRingModel(n, g),
+    "dgx-h100": _dgx_model,
 }
 
-#: The §6.1 comparison suite, in paper order.
-DEFAULT_ARCHITECTURES: Tuple[str, ...] = tuple(MODEL_REGISTRY)
+#: The §6.1 comparison suite, in paper order (the DGX island model is
+#: registered for the churn/MFU comparisons but not part of default sweeps).
+DEFAULT_ARCHITECTURES: Tuple[str, ...] = tuple(
+    a for a in MODEL_REGISTRY if a != "dgx-h100")
 
 
 def make_model(name: str, num_nodes: int, gpus_per_node: int = 4) -> HBDModel:
