@@ -1,0 +1,173 @@
+"""Batched DCN traffic engine vs the scalar orchestration reference.
+
+Evaluates the Fig. 17c grid -- (orchestrated | greedy | dgx-island) x
+fault_ratio x TP-32 at 85% job scale -- through the batched ``repro.dcn``
+kernels and through the per-snapshot scalar reference
+(``orchestrate_fat_tree`` + ``cross_tor_traffic`` in a Python loop),
+verifies the pair-count grids are bit-for-bit identical on the shared
+snapshots, and reports the cross-ToR curve (7% point included) plus the
+near-zero frontier (the job scale the fully ToR-aligned tier still covers
+at 7% faults).  Full mode gates the batched NumPy engine at >= 10x the
+scalar throughput; the JAX leg is bit-exactness-checked and reported
+(device count scaling is its value, same policy as the churn benchmark).
+
+Results are persisted as ``BENCH_dcn.json``.  Standalone entry point::
+
+    python -m benchmarks.dcn [--smoke] [--backend {numpy,jax,both}]
+                             [--snapshots N]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.dcn import (DcnSpec, cross_tor_curve, run_dcn_sweep,
+                       run_dcn_sweep_scalar)
+from repro.dcn import jax_backend
+
+from .common import row, write_json
+
+ACCEPT_SAMPLES = 100
+RATIOS = (0.0, 0.03, 0.05, 0.07, 0.10)
+SPEEDUP_GATE = 10.0
+
+
+def _grids_equal(a, b, rows: int) -> bool:
+    return all(np.array_equal(getattr(a, key)[:, :, :rows],
+                              getattr(b, key)[:, :, :rows])
+               for key in ("groups", "dp_pairs", "crossing_pairs",
+                           "crossing_pod_pairs")) \
+        and np.array_equal(a.feasible[:, :, :rows], b.feasible[:, :, :rows])
+
+
+def _time_runs(fn, reps: int = 3) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(smoke: bool = False, backend: str = "both", snapshots: int = None):
+    samples = snapshots or (10 if smoke else ACCEPT_SAMPLES)
+    spec = DcnSpec(num_nodes=512 if smoke else 2048, fault_ratios=RATIOS,
+                   samples=samples, tp_sizes=(32,), job_scale=0.85,
+                   agg_domain=128 if smoke else 512, seed=3)
+    masks = [spec.masks(ri) for ri in range(len(RATIOS))]
+    cells = len(RATIOS) * samples
+    payload = {"num_nodes": spec.num_nodes, "samples": samples,
+               "fault_ratios": list(RATIOS), "job_scale": spec.job_scale,
+               "agg_domain": spec.agg_domain, "smoke": smoke}
+
+    # Scalar reference on a snapshot subset (the full grid would take
+    # minutes); throughput extrapolates per snapshot row, mirroring the
+    # churn benchmark's scalar leg.  Best-of-2 on both sides so a noisy
+    # host perturbs the ratio, not decides it.
+    n_scalar = min(samples, 4 if smoke else 8)
+    spec_scalar = dataclasses.replace(spec, samples=n_scalar)
+    ref = run_dcn_sweep_scalar(spec_scalar,
+                               masks=[mk[:n_scalar] for mk in masks])
+    scalar_s = _time_runs(
+        lambda: run_dcn_sweep_scalar(spec_scalar,
+                                     masks=[mk[:n_scalar] for mk in masks]),
+        reps=1 if smoke else 2)
+    scalar_rows_per_sec = n_scalar * len(RATIOS) / scalar_s
+    payload.update(scalar_rows=n_scalar * len(RATIOS),
+                   scalar_s=round(scalar_s, 4),
+                   rows_per_sec_scalar=round(scalar_rows_per_sec, 2))
+    row(f"dcn_engine/scalar/rows{n_scalar * len(RATIOS)}/nodes{spec.num_nodes}",
+        scalar_s / (n_scalar * len(RATIOS)) * 1e6,
+        {"rows_per_sec": round(scalar_rows_per_sec, 2)})
+
+    numpy_speedup = None
+    jax_ok = jax_backend.HAVE_JAX
+    if backend == "jax" and not jax_ok:
+        raise RuntimeError("--backend jax requested but jax is unavailable")
+    legs = (["numpy"] if backend in ("numpy", "both") else []) \
+        + (["jax"] if backend in ("jax", "both") and jax_ok else [])
+    leg_results = {}
+    for leg in legs:
+        res = run_dcn_sweep(spec, backend=leg, masks=masks)
+        assert _grids_equal(res, ref, n_scalar), f"{leg} grids != scalar"
+        leg_results[leg] = res
+        leg_s = _time_runs(lambda: run_dcn_sweep(spec, backend=leg,
+                                                 masks=masks))
+        leg_rps = cells / leg_s
+        speedup = leg_rps / scalar_rows_per_sec
+        payload.update({f"{leg}_s": round(leg_s, 4),
+                        f"rows_per_sec_{leg}": round(leg_rps, 2),
+                        f"speedup_{leg}_vs_scalar": round(speedup, 2)})
+        if leg == "numpy":
+            numpy_speedup = speedup
+        else:
+            payload["devices"] = jax_backend.num_devices()
+        row(f"dcn_engine/{leg}/rows{cells}/nodes{spec.num_nodes}",
+            leg_s / cells * 1e6,
+            {"rows_per_sec": round(leg_rps, 2),
+             "speedup_vs_scalar": round(speedup, 1), "bit_exact": True})
+    # exactness scope: every leg vs the scalar reference on the shared
+    # subset, plus numpy vs jax on the FULL grid when both legs ran
+    payload["bit_exact_vs_scalar_rows"] = n_scalar * len(RATIOS)
+    if "numpy" in leg_results and "jax" in leg_results:
+        a, b = leg_results["numpy"], leg_results["jax"]
+        assert _grids_equal(a, b, samples), "jax full grid != numpy"
+        assert np.array_equal(a.n_constraints, b.n_constraints)
+        payload["bit_exact_backends_full_grid"] = True
+    result = leg_results.get("numpy", res)
+
+    # Fig. 17c: the cross-ToR-vs-fault-ratio curve (7% point included).
+    for variant in result.variants:
+        curve = cross_tor_curve(result, variant)
+        for ratio, share in curve.items():
+            row(f"fig17c/{variant}/fault{ratio:.2f}", 0.0,
+                "infeasible" if share is None else round(share, 4))
+        payload[f"curve_{variant}"] = {f"{r:.2f}": share
+                                       for r, share in curve.items()}
+
+    # Near-zero frontier: at a job scale the fully ToR-aligned tier still
+    # covers, the 7% point stays at the fault-free level (paper's claim).
+    frontier = dataclasses.replace(
+        spec, job_scale=0.30, fault_ratios=(0.0, 0.07),
+        samples=min(samples, 20))
+    fres = run_dcn_sweep(frontier, backend="numpy")
+    fcurve = cross_tor_curve(fres, "orchestrated")
+    payload["near_zero_frontier"] = {"job_scale": frontier.job_scale,
+                                     **{f"{r:.2f}": s
+                                        for r, s in fcurve.items()}}
+    row(f"fig17c/near_zero/scale{frontier.job_scale}", 0.0,
+        {f"fault{r:.2f}": None if s is None else round(s, 4)
+         for r, s in fcurve.items()})
+
+    # Throughput contract: the batched NumPy engine carries the >= 10x
+    # acceptance claim on the full grid.
+    if not smoke and samples >= ACCEPT_SAMPLES and numpy_speedup is not None:
+        if numpy_speedup < SPEEDUP_GATE:
+            raise AssertionError(
+                f"batched DCN engine only {numpy_speedup:.1f}x the scalar "
+                f"reference on the {cells}-row grid "
+                f"(acceptance: >={SPEEDUP_GATE:.0f}x)")
+    write_json("dcn", payload)
+    return payload
+
+
+def main():
+    import argparse
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--smoke", action="store_true",
+                   help="CI-sized grid (no speedup gate)")
+    p.add_argument("--backend", choices=("numpy", "jax", "both"),
+                   default="both")
+    p.add_argument("--snapshots", type=int, default=None,
+                   help="samples per fault ratio (default: 10 smoke / "
+                        f"{ACCEPT_SAMPLES} full)")
+    args = p.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, backend=args.backend, snapshots=args.snapshots)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,8 +19,8 @@ import sys
 import traceback
 
 SECTIONS = ("waste_ratio", "max_job", "fault_waiting", "sweep", "churn",
-            "mfu_tables", "orchestration", "cost", "collectives_bench",
-            "kernels_bench", "roofline")
+            "dcn", "mfu_tables", "orchestration", "cost",
+            "collectives_bench", "kernels_bench", "roofline")
 
 
 def main() -> None:

@@ -21,11 +21,14 @@ from .monte_carlo import ChurnEnsemble, ChurnSpec, monte_carlo_replay
 from .replay import ChurnJob, control_plane_replay, replay_trace
 from .timeline import (ChurnTimeline, ReconfigRecord, integrated_waste_table,
                        latency_table)
+from .traffic import (TrafficTimeline, integrated_traffic_table,
+                      traffic_replay)
 
 __all__ = [
     "ChurnEnsemble", "ChurnJob", "ChurnSpec", "ChurnTimeline",
-    "ReconfigRecord",
+    "ReconfigRecord", "TrafficTimeline",
     "control_plane_replay", "monte_carlo_replay", "replay_trace",
-    "integrated_waste_table", "latency_table",
+    "integrated_waste_table", "integrated_traffic_table", "latency_table",
+    "traffic_replay",
     "elastic_mfu", "pow2_floor", "timeline_mfu_table",
 ]

@@ -106,9 +106,12 @@ class ClusterManager:
         self.current_plan: Optional[MeshPlan] = None
         self.physical_faults: set = set()
         # Incremental orchestration: a delta-updated capacity tracker lets
-        # fault/repair events skip the O(cluster) elastic-DP probe ladder.
+        # fault/repair events skip the O(cluster) elastic-DP probe ladder,
+        # and (on regular fat-tree geometry) a delta-updated tiered-
+        # placement tracker replaces the full Algorithm-5 re-orchestration.
         self.incremental = incremental
         self._tracker = None
+        self._ft_tracker = None
 
     # ------------------------------------------------------- capacity view
 
@@ -133,6 +136,33 @@ class ClusterManager:
             if self._tracker.faults == self.physical_faults:
                 return self._tracker
         return self._build_tracker(m)
+
+    def _sync_ft_tracker(self, tp_size: int, kind: str,
+                         nodes: Tuple[int, ...]):
+        """Delta-updated Algorithm-4/5 tracker (regular geometry only).
+
+        Same lockstep contract as :meth:`_sync_tracker`; returns None when
+        the cluster geometry is irregular (the caller falls back to the
+        full re-orchestration inside ``plan_mesh``).
+        """
+        from ..dcn.incremental import IncrementalFatTreeOrchestrator
+        from ..dcn.kernel import FatTreeConfig
+        ft = self._ft_tracker
+        if ft is not None and ft.tp_size == tp_size:
+            apply = ft.fault if kind == "fault" else ft.repair
+            for u in nodes:
+                apply(u)
+            if ft.faults == self.physical_faults:
+                return ft
+        cfg = FatTreeConfig(self.cfg.num_nodes, self.cfg.gpus_per_node,
+                            self.nodes_per_tor, self.agg_domain, self.k)
+        if not cfg.regular():
+            self._ft_tracker = None
+            return None
+        self._ft_tracker = IncrementalFatTreeOrchestrator(
+            self.cfg.num_nodes, self.cfg.gpus_per_node, self.nodes_per_tor,
+            self.agg_domain, tp_size, self.k, set(self.physical_faults))
+        return self._ft_tracker
 
     def placeable_gpus(self, tp_size: int) -> int:
         """Current max placeable capacity at ``tp_size`` (delta-maintained)."""
@@ -164,6 +194,7 @@ class ClusterManager:
         plan = None
         dp = dp_size
         cap_groups = None
+        ft = None
         if self.incremental:
             # Delta-updated capacity: Algorithm 5 with 0 constraints degrades
             # to the unconstrained pass, so DCN-free capacity is exactly the
@@ -172,10 +203,18 @@ class ClusterManager:
             tracker = self._sync_tracker(max(1, tp_size // self.cfg.gpus_per_node),
                                          kind, nodes)
             cap_groups = tracker.capacity_groups()
+            ft = self._sync_ft_tracker(tp_size, kind, nodes)
         # Elastic scaling: shrink DP degree until the orchestrator can place
         # the job on the healthy subgraph (the paper's single-job priority).
         while dp >= 1:
             if cap_groups is not None and dp * pod_size > cap_groups:
+                dp //= 2
+                continue
+            # Tiered placement from the delta-updated fat-tree tracker
+            # (equal to full re-orchestration) when available.
+            placement = (ft.orchestrate(dp * pod_size * tp_size)
+                         if ft is not None else None)
+            if ft is not None and placement is None:
                 dp //= 2
                 continue
             try:
@@ -183,7 +222,8 @@ class ClusterManager:
                                  tp_size, dp, pod_size,
                                  faults=set(self.physical_faults), k=self.k,
                                  nodes_per_tor=self.nodes_per_tor,
-                                 agg_domain=self.agg_domain)
+                                 agg_domain=self.agg_domain,
+                                 placement=placement)
                 break
             except InsufficientCapacityError:
                 dp //= 2

@@ -32,6 +32,8 @@ import math
 import random
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+import numpy as np
+
 Placement = List[List[int]]  # list of TP groups, each an ordered node list
 
 
@@ -426,41 +428,87 @@ def greedy_baseline(num_nodes: int, gpus_per_node: int, faults: Set[int],
 
 
 # --------------------------------------------------------------------------
-# Cross-ToR traffic accounting (Fig. 17)
+# Cross-ToR / cross-pod traffic accounting (Fig. 17)
 # --------------------------------------------------------------------------
 
+def traffic_pair_counts(placement: Placement, nodes_per_tor: int,
+                        agg_domain: int = 0) -> Dict[str, int]:
+    """Integer DP-ring pair counts of one placement scheme.
+
+    DP/CP traffic rides the DCN between rank-aligned nodes of consecutive
+    TP groups; the DP ring closes (last group talks back to the first)
+    whenever more than one group exists.  Returns ``groups``, ``m`` (nodes
+    per group), ``dp_pairs``, ``crossing_pairs`` (pairs whose endpoints sit
+    under different ToRs) and ``crossing_pod_pairs`` (different aggregation
+    domains; 0 when ``agg_domain`` is 0).  Shared with the batched
+    ``repro.dcn`` kernels, which compute the same counts vectorized.
+    """
+    if not placement:
+        return {"groups": 0, "m": 0, "dp_pairs": 0, "crossing_pairs": 0,
+                "crossing_pod_pairs": 0}
+    arr = np.asarray(placement, dtype=np.int64)
+    g_count, m = arr.shape
+    crossing = crossing_pod = pairs = 0
+    if g_count > 1:
+        tor = arr // nodes_per_tor
+        crossing = int((tor != np.roll(tor, -1, axis=0)).sum())
+        pairs = g_count * m
+        if agg_domain:
+            pod = arr // agg_domain
+            crossing_pod = int((pod != np.roll(pod, -1, axis=0)).sum())
+    return {"groups": int(g_count), "m": int(m), "dp_pairs": pairs,
+            "crossing_pairs": crossing, "crossing_pod_pairs": crossing_pod}
+
+
+def traffic_volume_shares(dp_pairs, crossing_pairs, crossing_pod_pairs,
+                          tp_members, dp_bytes: float = 1.0,
+                          tp_bytes: float = 9.0) -> Dict[str, np.ndarray]:
+    """Volume-weighted DCN shares from integer pair counts.
+
+    Works elementwise on scalars or arrays (the batched engine feeds whole
+    grids through the identical float64 expressions, so shares agree
+    bit-for-bit with the scalar path).
+    """
+    dp_vol = np.asarray(dp_pairs, dtype=np.float64) * dp_bytes
+    cross_vol = np.asarray(crossing_pairs, dtype=np.float64) * dp_bytes
+    pod_vol = np.asarray(crossing_pod_pairs, dtype=np.float64) * dp_bytes
+    tp_vol = np.asarray(tp_members, dtype=np.float64) * tp_bytes
+    total = dp_vol + tp_vol
+    pairs = np.asarray(dp_pairs, dtype=np.float64)
+
+    def _div(num, den):
+        num, den = np.broadcast_arrays(np.asarray(num, dtype=np.float64), den)
+        return np.divide(num, den, out=np.zeros(num.shape), where=den != 0)
+
+    return {"cross_tor_share": _div(cross_vol, total),
+            "cross_pod_share": _div(pod_vol, total),
+            "dp_cross_share": _div(crossing_pairs, pairs)}
+
+
 def cross_tor_traffic(placement: Placement, nodes_per_tor: int,
-                      dp_bytes: float = 1.0,
-                      tp_bytes: float = 9.0) -> Dict[str, float]:
-    """Volume-weighted cross-ToR share.
+                      dp_bytes: float = 1.0, tp_bytes: float = 9.0,
+                      agg_domain: int = 0) -> Dict[str, float]:
+    """Volume-weighted cross-ToR (and optionally cross-pod) share.
 
     TP traffic always stays in the HBD (never touches the DCN).  DP/CP/PP
     traffic rides the DCN between rank-aligned nodes of consecutive TP groups
-    in the DP ring; each such node pair exchanges ``dp_bytes`` while each TP
-    group internally moves ``tp_bytes`` per member.  The defaults (9:1) match
-    the Megatron-style volume ratio that puts the paper's baseline plateau
-    near 10%; benchmarks recompute both from the actual model config.
+    in the DP ring, which closes whenever the placement holds more than one
+    group; each such node pair exchanges ``dp_bytes`` while each TP group
+    internally moves ``tp_bytes`` per member.  The defaults (9:1) match the
+    Megatron-style volume ratio that puts the paper's baseline plateau near
+    10%; ``repro.dcn.traffic.dp_tp_bytes`` recomputes both from an actual
+    model config.  With ``agg_domain`` set, ``cross_pod_share`` accounts the
+    pairs that additionally cross an aggregation-switch domain.
     """
-    if not placement:
-        return {"cross_tor_share": 0.0, "dp_cross_share": 0.0,
-                "dp_pairs": 0, "crossing_pairs": 0}
-    m = len(placement[0])
-    tor = lambda u: u // nodes_per_tor
-    crossing = 0
-    pairs = 0
-    ring = placement + [placement[0]] if len(placement) > 2 else placement
-    for g1, g2 in zip(ring, ring[1:]):
-        for rank in range(m):
-            pairs += 1
-            if tor(g1[rank]) != tor(g2[rank]):
-                crossing += 1
-    dp_vol = pairs * dp_bytes
-    cross_vol = crossing * dp_bytes
-    tp_vol = len(placement) * m * tp_bytes
-    total = dp_vol + tp_vol
+    c = traffic_pair_counts(placement, nodes_per_tor, agg_domain)
+    s = traffic_volume_shares(c["dp_pairs"], c["crossing_pairs"],
+                              c["crossing_pod_pairs"], c["groups"] * c["m"],
+                              dp_bytes, tp_bytes)
     return {
-        "cross_tor_share": cross_vol / total if total else 0.0,
-        "dp_cross_share": crossing / pairs if pairs else 0.0,
-        "dp_pairs": pairs,
-        "crossing_pairs": crossing,
+        "cross_tor_share": float(s["cross_tor_share"]),
+        "cross_pod_share": float(s["cross_pod_share"]),
+        "dp_cross_share": float(s["dp_cross_share"]),
+        "dp_pairs": c["dp_pairs"],
+        "crossing_pairs": c["crossing_pairs"],
+        "crossing_pod_pairs": c["crossing_pod_pairs"],
     }

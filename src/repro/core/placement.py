@@ -55,17 +55,25 @@ def plan_mesh(num_nodes: int, gpus_per_node: int, tp_size: int,
               dp_size: int, pod_size: int = 1, *,
               faults: Optional[Set[int]] = None, k: int = 3,
               nodes_per_tor: int = 8, agg_domain: int = 64,
-              orchestrated: bool = True, seed: int = 0) -> MeshPlan:
+              orchestrated: bool = True, seed: int = 0,
+              placement: Optional[Placement] = None) -> MeshPlan:
     """Run the HBD-DCN orchestrator and lay TP groups onto a mesh grid.
 
     The returned ``device_grid`` has shape (pod, dp, tp) (pod axis dropped if
     ``pod_size == 1``); entry [i, j, :] is the GPU ring of one TP group.
+
+    ``placement`` short-circuits the orchestrator with a pre-computed
+    scheme (e.g. from ``repro.dcn.IncrementalFatTreeOrchestrator``, whose
+    delta-updated placements equal ``orchestrate_fat_tree``); the mesh
+    layout and traffic accounting are identical either way.
     """
     faults = faults or set()
     dep = deployment_strategy(num_nodes, nodes_per_tor)
     groups_needed = dp_size * pod_size
     job_gpus = groups_needed * tp_size
-    if orchestrated:
+    if placement is not None:
+        pass
+    elif orchestrated:
         placement = orchestrate_fat_tree(
             num_nodes, gpus_per_node, nodes_per_tor, faults, tp_size,
             job_gpus, agg_domain, k)
@@ -99,7 +107,8 @@ def plan_mesh(num_nodes: int, gpus_per_node: int, tp_size: int,
         grid = grid[0]
         axis_names = ("data", "model")
     return MeshPlan(placement, segments_pos, rings, grid, axis_names, dep,
-                    cross_tor_traffic(placement, nodes_per_tor))
+                    cross_tor_traffic(placement, nodes_per_tor,
+                                      agg_domain=agg_domain))
 
 
 def make_orchestrated_mesh(plan: MeshPlan,

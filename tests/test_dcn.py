@@ -1,0 +1,369 @@
+"""repro.dcn equivalence suite: the batched fat-tree DCN traffic engine.
+
+Deterministic (seeded NumPy RNG, hypothesis-free) so it runs in the fast
+CI lane on a bare install:
+
+  * batched Algorithm-4/5 placements == scalar ``orchestrate_fat_tree``
+    bit-for-bit, across random fault grids (the 7% ratio point included),
+    awkward geometry, and both baselines (greedy, dgx-island);
+  * the sweep engine's count/share grids == the per-snapshot scalar
+    reference, on regular and irregular (fallback) geometry;
+  * the JAX kernel == the NumPy kernel (device-sharded when forced);
+  * ``IncrementalFatTreeOrchestrator`` == full re-orchestration after
+    random fault/repair sequences, and through ``ClusterManager``;
+  * the DP-ring closure fix (2-group placements close the ring) and the
+    shared volume-share float path.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.control_plane import ClusterManager
+from repro.core.orchestrator import (cross_tor_traffic, deployment_strategy,
+                                     greedy_baseline, orchestrate_fat_tree,
+                                     traffic_pair_counts,
+                                     traffic_volume_shares)
+from repro.core.placement import plan_mesh
+from repro.dcn import (DcnSpec, FatTreeConfig, IncrementalFatTreeOrchestrator,
+                       LLAMA3_70B, batched_dgx_island, batched_fat_tree,
+                       batched_greedy, batched_pair_counts, cross_tor_curve,
+                       dgx_island_placement, dp_tp_bytes, run_dcn_sweep,
+                       run_dcn_sweep_scalar, traffic_tables)
+from repro.dcn import jax_backend
+
+GRID_KEYS = ("groups", "dp_pairs", "crossing_pairs", "crossing_pod_pairs")
+
+
+def _assert_placements_equal(bp, scalar_fn, masks):
+    for si in range(masks.shape[0]):
+        faults = set(np.nonzero(masks[si])[0].tolist())
+        ref = scalar_fn(faults)
+        got = bp.placement(si)
+        assert (ref is None) == (got is None), si
+        if ref is not None:
+            assert got == ref, si
+
+
+# ------------------------------------------------- batched == scalar kernels
+
+@pytest.mark.parametrize("seed", range(4))
+def test_batched_fat_tree_matches_scalar(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.choice([128, 256]))
+    agg = int(rng.choice([32, 64]))
+    k = int(rng.choice([1, 2, 3]))
+    tp = int(rng.choice([8, 16, 32]))
+    ratio = [0.0, 0.07, 0.15][seed % 3]          # incl. the paper's 7% point
+    masks = rng.random((6, n)) < ratio
+    job = int(n * 4 * float(rng.choice([0.5, 0.85]))) // tp * tp
+    cfg = FatTreeConfig(n, 4, 8, agg, k)
+    bp = batched_fat_tree(masks, cfg, tp, job)
+    _assert_placements_equal(
+        bp, lambda f: orchestrate_fat_tree(n, 4, 8, f, tp, job, agg, k),
+        masks)
+    # feasible rows carry the satisfied-constraint level
+    assert ((bp.n_constraints >= 0) == bp.feasible).all()
+    assert (bp.n_constraints <= cfg.max_constraints).all()
+
+
+def test_batched_fat_tree_awkward_geometry():
+    """m > chunk length, k=1, all-faulty and fault-free rows, m=1."""
+    n, agg = 128, 32                              # Tpd = 4
+    masks = np.stack([np.zeros(n, bool), np.ones(n, bool),
+                      np.arange(n) % 9 == 0])
+    for tp, k in ((64, 1), (4, 3), (32, 2)):      # m = 16 > Tpd, m = 1, m = 8
+        cfg = FatTreeConfig(n, 4, 8, agg, k)
+        job = int(n * 4 * 0.5) // tp * tp
+        bp = batched_fat_tree(masks, cfg, tp, job)
+        _assert_placements_equal(
+            bp, lambda f: orchestrate_fat_tree(n, 4, 8, f, tp, job, agg, k),
+            masks)
+
+
+def test_batched_fat_tree_empty_batch():
+    bp = batched_fat_tree(np.zeros((0, 64), bool),
+                          FatTreeConfig(64, 4, 8, 32, 3), 16, 128)
+    assert bp.members.shape[0] == 0 and bp.feasible.shape == (0,)
+
+
+def test_batched_greedy_matches_scalar():
+    rng = np.random.default_rng(2)
+    n = 256
+    order = np.asarray(deployment_strategy(n, 8).order)
+    masks = rng.random((8, n)) < 0.12
+    cfg = FatTreeConfig(n, 4, 8, 64, 3)
+    for seed in (0, 7):
+        job = int(n * 4 * 0.6) // 32 * 32
+        bp = batched_greedy(masks, cfg, 32, job, seed=seed, order=order)
+        _assert_placements_equal(
+            bp, lambda f: greedy_baseline(n, 4, f, 32, job, 3, seed,
+                                          order=order.tolist()), masks)
+
+
+def test_batched_dgx_island_matches_scalar():
+    rng = np.random.default_rng(3)
+    n = 256
+    masks = rng.random((8, n)) < 0.1
+    cfg = FatTreeConfig(n, 4, 8, 64, 3)
+    bp = batched_dgx_island(masks, cfg, 32, 512)
+    _assert_placements_equal(
+        bp, lambda f: dgx_island_placement(n, f, 8, cfg.need_groups(32, 512)),
+        masks)
+
+
+# ---------------------------------------------------------------- the engine
+
+def _small_spec(**kw):
+    base = dict(num_nodes=256, fault_ratios=(0.0, 0.05, 0.07), samples=5,
+                tp_sizes=(16, 32), job_scale=0.85, agg_domain=64, seed=2)
+    base.update(kw)
+    return DcnSpec(**base)
+
+
+def test_run_dcn_sweep_matches_scalar_reference():
+    spec = _small_spec()
+    batched = run_dcn_sweep(spec, backend="numpy")
+    scalar = run_dcn_sweep_scalar(spec)
+    for key in GRID_KEYS:
+        assert np.array_equal(getattr(batched, key), getattr(scalar, key)), key
+    assert np.array_equal(batched.feasible, scalar.feasible)
+    # volume shares go through the identical float64 expressions
+    sb, ss = batched.shares(1.0, 9.0), scalar.shares(1.0, 9.0)
+    for key in sb:
+        assert np.array_equal(sb[key], ss[key]), key
+
+
+def test_run_dcn_sweep_irregular_geometry_falls_back():
+    spec = _small_spec(num_nodes=250, fault_ratios=(0.06,), samples=4,
+                       tp_sizes=(16,))
+    assert not spec.config.regular()
+    batched = run_dcn_sweep(spec, backend="numpy")
+    scalar = run_dcn_sweep_scalar(spec)
+    for key in GRID_KEYS:
+        assert np.array_equal(getattr(batched, key), getattr(scalar, key)), key
+
+
+def test_shares_match_scalar_cross_tor_traffic_floats():
+    """Engine share grids == the scalar dict floats, bit for bit."""
+    spec = _small_spec(fault_ratios=(0.07,), samples=4, tp_sizes=(32,))
+    res = run_dcn_sweep(spec, backend="numpy")
+    shares = res.shares(1.0, 9.0)
+    cfg = spec.config
+    masks = spec.masks(0)
+    for si in range(4):
+        faults = set(np.nonzero(masks[si])[0].tolist())
+        pl = orchestrate_fat_tree(cfg.num_nodes, 4, 8, faults, 32,
+                                  spec.job_gpus(32), cfg.agg_domain, cfg.k)
+        ref = cross_tor_traffic(pl, 8, 1.0, 9.0, agg_domain=cfg.agg_domain)
+        assert shares["cross_tor_share"][0, 0, si, 0] == ref["cross_tor_share"]
+        assert shares["cross_pod_share"][0, 0, si, 0] == ref["cross_pod_share"]
+        assert shares["dp_cross_share"][0, 0, si, 0] == ref["dp_cross_share"]
+
+
+def test_traffic_tables_and_curve():
+    spec = _small_spec(samples=4)
+    res = run_dcn_sweep(spec, backend="numpy")
+    rows = traffic_tables(res, dp_bytes=1.0, tp_bytes=9.0)
+    assert len(rows) == 3 * 3 * 2                 # variants x ratios x tps
+    seven = [r for r in rows if r["fault_ratio"] == 0.07
+             and r["variant"] == "orchestrated"]
+    assert len(seven) == 2
+    assert all(r["mean_constraints"] is not None for r in seven)
+    curve = cross_tor_curve(res, "orchestrated", tp=32,
+                            dp_bytes=1.0, tp_bytes=9.0)
+    assert set(curve) == {0.0, 0.05, 0.07}
+    # orchestrated beats the greedy baseline on the mean cross-ToR share
+    greedy = cross_tor_curve(res, "greedy", tp=32, dp_bytes=1.0, tp_bytes=9.0)
+    assert curve[0.0] < greedy[0.0]
+
+
+# ------------------------------------------------------------ jax == numpy
+
+@pytest.mark.skipif(not jax_backend.HAVE_JAX, reason="jax unavailable")
+def test_jax_fat_tree_matches_numpy():
+    rng = np.random.default_rng(4)
+    n, agg, k = 128, 32, 3
+    cfg = FatTreeConfig(n, 4, 8, agg, k)
+    masks = rng.random((9, n)) < 0.08             # ragged vs chunk size
+    tps, jobs = (16, 32), (int(n * 4 * 0.7) // 16 * 16,
+                           int(n * 4 * 0.7) // 32 * 32)
+    dev = jax_backend.fat_tree_placements(masks, cfg, tps, jobs,
+                                          chunk_snapshots=4)
+    for ti, tp in enumerate(tps):
+        ref = batched_fat_tree(masks, cfg, tp, jobs[ti])
+        assert np.array_equal(dev[ti].members, ref.members)
+        assert np.array_equal(dev[ti].feasible, ref.feasible)
+        assert np.array_equal(dev[ti].n_constraints, ref.n_constraints)
+
+
+@pytest.mark.skipif(not jax_backend.HAVE_JAX, reason="jax unavailable")
+def test_jax_backend_rejects_width_mismatch():
+    """Both backends must reject inconsistent mask widths (the NumPy
+    kernel fails its chunk-grid reshape; jax raises the same contract)."""
+    cfg = FatTreeConfig(128, 4, 8, 32, 3)
+    with pytest.raises(ValueError):
+        jax_backend.fat_tree_placements(np.zeros((2, 130), bool), cfg,
+                                        [16], [256])
+
+
+@pytest.mark.skipif(not jax_backend.HAVE_JAX, reason="jax unavailable")
+def test_run_dcn_sweep_jax_backend_bit_exact():
+    spec = _small_spec(samples=4)
+    a = run_dcn_sweep(spec, backend="numpy")
+    b = run_dcn_sweep(spec, backend="jax")
+    assert b.backend == "jax"
+    for key in GRID_KEYS:
+        assert np.array_equal(getattr(a, key), getattr(b, key)), key
+    assert np.array_equal(a.n_constraints, b.n_constraints)
+
+
+# ------------------------------------------- incremental == full Algorithm 5
+
+@pytest.mark.parametrize("seed", range(3))
+def test_incremental_fat_tree_equals_full(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.choice([128, 256]))
+    agg = int(rng.choice([32, 64]))
+    k = int(rng.choice([2, 3]))
+    tp = int(rng.choice([8, 16, 32]))
+    inc = IncrementalFatTreeOrchestrator(n, 4, 8, agg, tp, k)
+    faults = set()
+    for _ in range(50):
+        if faults and rng.random() < 0.45:
+            u = int(sorted(faults)[rng.integers(len(faults))])
+            faults.discard(u)
+            inc.repair(u)
+        else:
+            u = int(rng.integers(n))
+            faults.add(u)
+            inc.fault(u)
+        job = int(n * 4 * float(rng.choice([0.5, 0.85]))) // tp * tp
+        ref = orchestrate_fat_tree(n, 4, 8, faults, tp, job, agg, k)
+        got = inc.orchestrate(job)
+        assert (ref is None) == (got is None)
+        if ref is not None:
+            assert got == ref
+
+
+def test_incremental_fat_tree_idempotent_and_irregular():
+    inc = IncrementalFatTreeOrchestrator(128, 4, 8, 32, 16, 3, faults={3})
+    job = 256
+    base = inc.orchestrate(job)
+    inc.fault(3)                                  # double fault: no-op
+    assert inc.orchestrate(job) == base
+    inc.repair(3)
+    inc.repair(3)                                 # double repair: no-op
+    assert inc.orchestrate(job) == \
+        orchestrate_fat_tree(128, 4, 8, set(), 16, job, 32, 3)
+    with pytest.raises(ValueError):
+        IncrementalFatTreeOrchestrator(100, 4, 8, 64, 16, 3)
+
+
+def test_cluster_manager_uses_fat_tree_tracker():
+    """Incremental ClusterManager must produce the exact non-incremental
+    plans while routing placements through the delta-updated tracker."""
+    events = [("fault", {3, 4}), ("fault", {11}), ("repair", {4}),
+              ("fault", {20, 21}), ("repair", {3})]
+    plans = {}
+    for incremental in (False, True):
+        cm = ClusterManager(64, 4, k=3, nodes_per_tor=8, agg_domain=32,
+                            incremental=incremental)
+        out = []
+        for i, (kind, nodes) in enumerate(events):
+            fn = cm.on_fault if kind == "fault" else cm.on_repair
+            out.append(fn(60.0 * i, nodes, tp_size=16, dp_size=8).plan.placement)
+        plans[incremental] = out
+        if incremental:
+            assert cm._ft_tracker is not None
+            assert cm._ft_tracker.faults == cm.physical_faults
+    assert plans[True] == plans[False]
+
+
+def test_plan_mesh_accepts_precomputed_placement():
+    faults = {5, 9}
+    ref = plan_mesh(64, 4, 16, 8, faults=set(faults), k=3, nodes_per_tor=8,
+                    agg_domain=32)
+    pl = orchestrate_fat_tree(64, 4, 8, set(faults), 16, 8 * 16, 32, 3)
+    via = plan_mesh(64, 4, 16, 8, faults=set(faults), k=3, nodes_per_tor=8,
+                    agg_domain=32, placement=pl)
+    assert np.array_equal(ref.device_grid, via.device_grid)
+    assert ref.cross_tor == via.cross_tor
+
+
+# ------------------------------------------------ traffic accounting (fix)
+
+def test_cross_tor_ring_closure_two_groups():
+    """Satellite fix: a 2-group placement closes the DP ring (both hops
+    counted) instead of being scored as an open chain."""
+    two = [[0, 1], [8, 9]]
+    c = traffic_pair_counts(two, nodes_per_tor=8)
+    assert c["dp_pairs"] == 4                     # 2 groups x 2 ranks, closed
+    assert c["crossing_pairs"] == 4               # every hop crosses
+    d = cross_tor_traffic(two, 8, 1.0, 9.0)
+    assert d["dp_cross_share"] == 1.0
+    # same two groups under one ToR: closed ring, nothing crosses
+    within = [[0, 1], [2, 3]]
+    assert traffic_pair_counts(within, 8)["crossing_pairs"] == 0
+    # single group: no DP traffic at all
+    one = traffic_pair_counts([[0, 1]], 8)
+    assert one["dp_pairs"] == 0 and one["crossing_pairs"] == 0
+    assert cross_tor_traffic([], 8)["cross_tor_share"] == 0.0
+
+
+def test_cross_pod_accounting():
+    pl = [[0], [8], [64]]                        # third group in pod 1
+    d = cross_tor_traffic(pl, 8, 1.0, 0.0, agg_domain=64)
+    assert d["crossing_pairs"] == 3              # every ring hop crosses a ToR
+    assert d["crossing_pod_pairs"] == 2          # pod boundary crossed twice
+    assert d["cross_pod_share"] == pytest.approx(2 / 3)
+
+
+def test_batched_pair_counts_match_scalar():
+    rng = np.random.default_rng(6)
+    n = 256
+    masks = rng.random((6, n)) < 0.07
+    cfg = FatTreeConfig(n, 4, 8, 64, 3)
+    job = int(n * 4 * 0.85) // 32 * 32
+    bp = batched_fat_tree(masks, cfg, 32, job)
+    counts = batched_pair_counts(bp, 8, 64)
+    for si in range(6):
+        pl = bp.placement(si)
+        ref = traffic_pair_counts(pl if pl is not None else [], 8, 64)
+        for key in ("dp_pairs", "crossing_pairs", "crossing_pod_pairs"):
+            assert counts[key][si] == ref[key], (key, si)
+
+
+def test_dp_tp_bytes_from_model_config():
+    dp_b, tp_b = dp_tp_bytes(LLAMA3_70B, 32, 64)
+    assert dp_b > 0 and tp_b > 0
+    assert 7 <= tp_b / dp_b <= 11                 # the historical ~9:1
+    assert dp_tp_bytes(LLAMA3_70B, 32, 1)[0] == 0.0    # no DP ring
+    assert dp_tp_bytes(LLAMA3_70B, 1, 64)[1] == 0.0    # no TP comm
+    assert traffic_volume_shares(0, 0, 0, 0)["cross_tor_share"] == 0.0
+
+
+# ----------------------------------------------------- churn traffic bridge
+
+def test_traffic_replay_matches_per_interval_scalar():
+    from repro.churn import integrated_traffic_table, traffic_replay
+    from repro.core.trace import generate_trace, to_4gpu_trace
+    tr = to_4gpu_trace(generate_trace(64, horizon_h=15 * 24.0, seed=4))
+    assert tr.num_nodes == 128
+    tl = traffic_replay(tr, tp_sizes=(16,), job_scale=0.6, agg_domain=32,
+                        backend="numpy")
+    edges = tr.interval_edges()
+    masks = tr.fault_masks(edges)
+    vi = tl.index("orchestrated")
+    job = max(int(128 * 4 * 0.6) // 16 * 16, 16)
+    for b in (0, len(edges) // 2, len(edges) - 1):
+        faults = set(np.nonzero(masks[b])[0].tolist())
+        pl = orchestrate_fat_tree(128, 4, 8, faults, 16, job, 32, 3)
+        ref = traffic_pair_counts(pl if pl is not None else [], 8, 32)
+        assert tl.crossing_pairs[vi, b, 0] == ref["crossing_pairs"]
+        assert tl.dp_pairs[vi, b, 0] == ref["dp_pairs"]
+    rows = integrated_traffic_table(tl, dp_bytes=1.0, tp_bytes=9.0)
+    assert len(rows) == 3
+    for r in rows:
+        assert 0.0 <= r["time_mean_cross_tor_share"] <= 1.0
+        assert r["cross_tor_gpu_h"] <= r["dp_gpu_h"] + 1e-9
+        assert 0.0 <= r["feasible_time_share"] <= 1.0

@@ -1,0 +1,82 @@
+"""Hypothesis property tests for tiered fat-tree placements (repro.dcn).
+
+Requires the ``dev`` extra; skips cleanly on a bare install.  The
+deterministic equivalence coverage lives in ``test_dcn.py`` and always
+runs.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.orchestrator import (cross_tor_traffic, deployment_strategy,
+                                     orchestrate_fat_tree,
+                                     placement_fat_tree)
+from repro.dcn import FatTreeConfig, batched_fat_tree, batched_pair_counts
+
+GEOMETRY = st.tuples(
+    st.sampled_from([64, 128, 192, 256]),        # num_nodes
+    st.sampled_from([8, 16, 32, 64]),            # agg_domain
+    st.sampled_from([1, 2, 4, 8]),               # m (nodes per group)
+    st.integers(1, 4),                           # k
+)
+
+
+@given(GEOMETRY, st.sets(st.integers(0, 255), max_size=40),
+       st.integers(0, 24))
+@settings(max_examples=50, deadline=None)
+def test_tiered_placement_invariants(geom, faults, n_constraints):
+    """Group disjointness, fault avoidance, and capacity bounds hold at
+    every constraint level."""
+    n, agg, m, k = geom
+    if agg > n:
+        agg = n
+    faults = {f for f in faults if f < n}
+    dep = deployment_strategy(n, 8)
+    scheme = placement_fat_tree(dep, n_constraints, faults, m, agg, k)
+    used = [u for g in scheme for u in g]
+    assert len(used) == len(set(used))           # disjoint groups
+    assert not (set(used) & faults)              # never on faulty nodes
+    assert all(len(g) == m for g in scheme)
+    assert len(scheme) * m <= n - len(faults)    # capacity bound
+
+
+@given(GEOMETRY, st.sets(st.integers(0, 255), max_size=60))
+@settings(max_examples=50, deadline=None)
+def test_full_constraints_never_increase_cross_tor(geom, faults):
+    """Tightening from no constraints to the full tier set never increases
+    the DP cross-ToR share (the step-wise curve is non-monotone -- that is
+    exactly why Algorithm 5 binary-searches -- but the ends are ordered)."""
+    n, agg, m, k = geom
+    if agg > n:
+        agg = n
+    faults = {f for f in faults if f < n}
+    dep = deployment_strategy(n, 8)
+    unconstrained = placement_fat_tree(dep, 0, faults, m, agg, k)
+    constrained = placement_fat_tree(dep, n // agg + 8, faults, m, agg, k)
+    s0 = cross_tor_traffic(unconstrained, 8)["dp_cross_share"] \
+        if unconstrained else 0.0
+    s1 = cross_tor_traffic(constrained, 8)["dp_cross_share"] \
+        if constrained else 0.0
+    assert s1 <= s0 + 1e-12
+
+
+@given(st.sampled_from([128, 256]), st.sets(st.integers(0, 255), max_size=50),
+       st.sampled_from([8, 16, 32]), st.floats(0.3, 0.9))
+@settings(max_examples=40, deadline=None)
+def test_batched_equals_scalar_on_random_fault_sets(n, faults, tp, scale):
+    faults = {f for f in faults if f < n}
+    cfg = FatTreeConfig(n, 4, 8, 64, 3)
+    job = max(int(n * 4 * scale) // tp * tp, tp)
+    mask = np.zeros((1, n), dtype=bool)
+    mask[0, list(faults)] = True
+    bp = batched_fat_tree(mask, cfg, tp, job)
+    ref = orchestrate_fat_tree(n, 4, 8, faults, tp, job, 64, 3)
+    got = bp.placement(0)
+    assert (ref is None) == (got is None)
+    if ref is not None:
+        assert got == ref
+        counts = batched_pair_counts(bp, 8, 64)
+        assert counts["dp_pairs"][0] >= counts["crossing_pairs"][0] >= 0
