@@ -18,6 +18,21 @@ def timed(fn: Callable, *args, **kwargs):
     return out, (time.perf_counter() - t0) * 1e6
 
 
+def time_runs(fn: Callable, reps: int = 3) -> float:
+    """Best-of-``reps`` wall time of ``fn()``, seconds.
+
+    The speedup gates compare best-of-N on both sides so container timing
+    noise (observed ~2x swings) perturbs a ratio instead of deciding it;
+    one shared implementation so the timing discipline can't diverge
+    between gated sections."""
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
 def row(name: str, us: float, derived) -> str:
     if isinstance(derived, float):
         derived = f"{derived:.6g}"

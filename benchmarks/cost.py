@@ -1,45 +1,177 @@
-"""Paper Table 6/8 + Fig 17d: interconnect cost/power + aggregate cost."""
+"""Batched cost engine vs the scalar §6.5 reference (Tables 6/8, Fig. 17d).
+
+Reproduces Table 6 per-GPU costs (validated to the cent against the
+paper's printed values), the 30.86%-of-NVL-72 / 62.84%-of-TPUv4 headline
+ratios, and the Fig. 17d aggregate-cost-vs-fault-ratio curves through the
+batched ``repro.cost`` engine -- then times the engine against the
+per-snapshot scalar reference (``evaluate`` + ``aggregate_cost`` in a
+Python loop), verifies the dollar grids are bit-for-bit identical on the
+shared snapshots (and across backends on the full grid), and (full mode)
+gates the batched NumPy engine at >= 10x the scalar throughput.
+
+Results are persisted as ``BENCH_cost.json``.  Standalone entry point::
+
+    python -m benchmarks.cost [--smoke] [--backend {numpy,jax,both}]
+                              [--snapshots N]
+"""
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.cost_model import (ALL_BOMS, INFINITEHBD_K2, INFINITEHBD_K3,
-                                   NVL72, TPUV4, aggregate_cost, cost_ratio,
-                                   table6)
-from repro.core.hbd_models import default_suite
-from repro.core.trace import iid_fault_sets
+from repro.cost import (CostSpec, cost_effectiveness_table,
+                        headline_ratio_rows, hosting_architectures,
+                        per_gpu_cost_table, run_cost_sweep,
+                        run_cost_sweep_scalar)
+from repro.sim import jax_backend
 
-from .common import row, timed
+from .common import row, time_runs, write_json
+
+ACCEPT_SAMPLES = 200
+RATIOS = (0.0, 0.02, 0.05, 0.08, 0.12, 0.15)
+SPEEDUP_GATE = 10.0
+
+#: Table 6 as printed in the paper (per-GPU USD) -- the engine must hit
+#: these to the cent; a drift in the BOMs fails the benchmark, not just
+#: the unit tests.
+TABLE6_PER_GPU_USD = {
+    "tpuv4": 1567.20, "nvl-36": 9563.20, "nvl-72": 9563.20,
+    "nvl-36x2": 17924.00, "nvl-576": 30417.60,
+    "infinitehbd-k2": 2626.80, "infinitehbd-k3": 3740.60,
+}
 
 
-def run():
-    rows, us = timed(table6)
-    for r in rows:
-        row(f"table6/{r['architecture']}", us / len(rows), r)
-    row("cost_ratio/k2_vs_nvl72", 0.0,
-        {"ours": round(cost_ratio(INFINITEHBD_K2, NVL72), 4),
-         "paper": 0.3086})
-    row("cost_ratio/k2_vs_tpuv4", 0.0,
-        {"ours": round(cost_ratio(INFINITEHBD_K2, TPUV4), 4),
-         "paper": 0.6284})
+def _grids_equal(a, b, rows: int) -> bool:
+    return all(np.array_equal(getattr(a, key)[:, :, :rows],
+                              getattr(b, key)[:, :, :rows])
+               for key in ("faulty_gpus", "placed_gpus", "cost_usd")) \
+        and np.array_equal(a.total_gpus, b.total_gpus)
 
-    # Fig 17d: aggregate cost vs fault ratio on a 3K-GPU cluster (TP-32)
-    bom_for = {"infinitehbd-k2": INFINITEHBD_K2, "infinitehbd-k3":
-               INFINITEHBD_K3, "nvl-72": NVL72, "tpuv4": TPUV4}
-    suite = {m.name: m for m in default_suite(768, 4)}      # 3072 GPUs
-    for fr in (0.0, 0.02, 0.05, 0.08, 0.12, 0.15):
-        out = {}
-        for name, bom in bom_for.items():
-            model = suite[name if name in suite else name]
-            vals = []
-            for faults in iid_fault_sets(768, fr, 5, seed=2):
-                r = model.evaluate(faults, 32)
-                vals.append(aggregate_cost(bom, 3072, r.wasted_gpus,
-                                           r.faulty_gpus))
-            out[name] = round(float(np.mean(vals)) / 1e6, 3)
-        row(f"fig17d/fault{fr:.2f}", 0.0, out)
+
+def run(smoke: bool = False, backend: str = "both", snapshots: int = None):
+    samples = snapshots or (8 if smoke else ACCEPT_SAMPLES)
+    payload = {"samples": samples, "smoke": smoke,
+               "fault_ratios": list(RATIOS)}
+
+    # Table 6 to the cent + the headline ratios.
+    t6, drift = {}, []
+    for r in per_gpu_cost_table():
+        t6[r["architecture"]] = r["per_gpu_cost"]
+        row(f"table6/{r['architecture']}", 0.0, r)
+        want = TABLE6_PER_GPU_USD.get(r["architecture"])
+        if want is not None and abs(r["per_gpu_cost"] - want) >= 0.005:
+            drift.append((r["architecture"], r["per_gpu_cost"], want))
+    assert not drift, f"Table 6 drifted from the paper: {drift}"
+    payload["table6_per_gpu_usd"] = t6
+    for r in headline_ratio_rows():
+        row(f"cost_ratio/{r['pair']}", 0.0, r)
+        assert abs(r["ours"] - r["paper"]) < 0.002, r
+    payload["headline_ratios"] = headline_ratio_rows()
+
+    # Fig. 17d grid: fault_ratio x architecture x snapshot x TP.
+    spec = CostSpec(num_nodes=256 if smoke else 768, fault_ratios=RATIOS,
+                    samples=samples, tp_sizes=(8, 32), seed=5)
+    cells = len(RATIOS) * samples
+    payload.update(num_nodes=spec.num_nodes, tp_sizes=list(spec.tp_sizes),
+                   architectures=list(spec.architectures))
+
+    # Scalar reference on a snapshot subset (per-snapshot Python would take
+    # minutes on the full grid); throughput extrapolates per snapshot row.
+    # Best-of-N on both sides so a noisy host perturbs the ratio, not
+    # decides it (container timing swings ~2x).
+    n_scalar = min(samples, 4 if smoke else 8)
+    ref = run_cost_sweep_scalar(spec, max_samples=n_scalar)
+    scalar_s = time_runs(
+        lambda: run_cost_sweep_scalar(spec, max_samples=n_scalar),
+        reps=1 if smoke else 2)
+    scalar_rows_per_sec = n_scalar * len(RATIOS) / scalar_s
+    payload.update(scalar_rows=n_scalar * len(RATIOS),
+                   scalar_s=round(scalar_s, 4),
+                   rows_per_sec_scalar=round(scalar_rows_per_sec, 2))
+    row(f"cost_engine/scalar/rows{n_scalar * len(RATIOS)}"
+        f"/nodes{spec.num_nodes}",
+        scalar_s / (n_scalar * len(RATIOS)) * 1e6,
+        {"rows_per_sec": round(scalar_rows_per_sec, 2)})
+
+    numpy_speedup = None
+    jax_ok = jax_backend.HAVE_JAX
+    if backend == "jax" and not jax_ok:
+        raise RuntimeError("--backend jax requested but jax is unavailable")
+    legs = (["numpy"] if backend in ("numpy", "both") else []) \
+        + (["jax"] if backend in ("jax", "both") and jax_ok else [])
+    leg_results = {}
+    for leg in legs:
+        res = run_cost_sweep(spec, backend=leg)
+        assert _grids_equal(res, ref, n_scalar), f"{leg} grids != scalar"
+        leg_results[leg] = res
+        leg_s = time_runs(lambda: run_cost_sweep(spec, backend=leg))
+        leg_rps = cells / leg_s
+        speedup = leg_rps / scalar_rows_per_sec
+        payload.update({f"{leg}_s": round(leg_s, 4),
+                        f"rows_per_sec_{leg}": round(leg_rps, 2),
+                        f"speedup_{leg}_vs_scalar": round(speedup, 2)})
+        if leg == "numpy":
+            numpy_speedup = speedup
+        else:
+            payload["devices"] = jax_backend.num_devices()
+        row(f"cost_engine/{leg}/rows{cells}/nodes{spec.num_nodes}",
+            leg_s / cells * 1e6,
+            {"rows_per_sec": round(leg_rps, 2),
+             "speedup_vs_scalar": round(speedup, 1), "bit_exact": True})
+    payload["bit_exact_vs_scalar_rows"] = n_scalar * len(RATIOS)
+    if "numpy" in leg_results and "jax" in leg_results:
+        a, b = leg_results["numpy"], leg_results["jax"]
+        assert _grids_equal(a, b, samples), "jax full grid != numpy"
+        payload["bit_exact_backends_full_grid"] = True
+    result = leg_results.get("numpy") or next(iter(leg_results.values()))
+
+    # Fig. 17d: aggregate cost vs fault ratio, NVL-72-normalized.  The
+    # paper's comparison runs at TP-32; an architecture that can never
+    # host a TP (dgx-h100's 8-GPU islands at TP-32) would contribute a
+    # degenerate whole-cluster-stranded constant, so each TP's rows skip
+    # architectures with zero placeable capacity on the entire grid --
+    # the §6.3 DGX baseline shows up on the TP-8 rows, where it places.
+    for tp in (32, 8):
+        hosts = hosting_architectures(result, tp)
+        by_ratio = {}
+        for r in cost_effectiveness_table(result, baseline="nvl-72", tp=tp):
+            if r["architecture"] not in hosts:
+                continue
+            by_ratio.setdefault(r["fault_ratio"], {})[r["architecture"]] = \
+                round(r["mean_cost_usd"] / 1e6, 3)
+        for ratio, out in by_ratio.items():
+            row(f"fig17d/tp{tp}/fault{ratio:.2f}", 0.0, out)
+        payload[f"fig17d_musd_tp{tp}"] = {f"{r:.2f}": v
+                                          for r, v in by_ratio.items()}
+        payload[f"fig17d_tp{tp}_skipped"] = \
+            [n for n in result.names if n not in hosts]
+
+    # Throughput contract: the batched NumPy engine carries the >= 10x
+    # acceptance claim on the full grid.
+    if not smoke and samples >= ACCEPT_SAMPLES and numpy_speedup is not None:
+        if numpy_speedup < SPEEDUP_GATE:
+            raise AssertionError(
+                f"batched cost engine only {numpy_speedup:.1f}x the scalar "
+                f"reference on the {cells}-row grid "
+                f"(acceptance: >={SPEEDUP_GATE:.0f}x)")
+    write_json("cost", payload)
+    return payload
+
+
+def main():
+    import argparse
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--smoke", action="store_true",
+                   help="CI-sized grid (no speedup gate)")
+    p.add_argument("--backend", choices=("numpy", "jax", "both"),
+                   default="both")
+    p.add_argument("--snapshots", type=int, default=None,
+                   help="samples per fault ratio (default: 8 smoke / "
+                        f"{ACCEPT_SAMPLES} full)")
+    args = p.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, backend=args.backend, snapshots=args.snapshots)
 
 
 if __name__ == "__main__":
-    run()
+    main()

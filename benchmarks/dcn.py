@@ -20,7 +20,6 @@ Results are persisted as ``BENCH_dcn.json``.  Standalone entry point::
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import numpy as np
 
@@ -28,7 +27,7 @@ from repro.dcn import (DcnSpec, cross_tor_curve, run_dcn_sweep,
                        run_dcn_sweep_scalar)
 from repro.dcn import jax_backend
 
-from .common import row, write_json
+from .common import row, time_runs, write_json
 
 ACCEPT_SAMPLES = 100
 RATIOS = (0.0, 0.03, 0.05, 0.07, 0.10)
@@ -41,15 +40,6 @@ def _grids_equal(a, b, rows: int) -> bool:
                for key in ("groups", "dp_pairs", "crossing_pairs",
                            "crossing_pod_pairs")) \
         and np.array_equal(a.feasible[:, :, :rows], b.feasible[:, :, :rows])
-
-
-def _time_runs(fn, reps: int = 3) -> float:
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best
 
 
 def run(smoke: bool = False, backend: str = "both", snapshots: int = None):
@@ -71,7 +61,7 @@ def run(smoke: bool = False, backend: str = "both", snapshots: int = None):
     spec_scalar = dataclasses.replace(spec, samples=n_scalar)
     ref = run_dcn_sweep_scalar(spec_scalar,
                                masks=[mk[:n_scalar] for mk in masks])
-    scalar_s = _time_runs(
+    scalar_s = time_runs(
         lambda: run_dcn_sweep_scalar(spec_scalar,
                                      masks=[mk[:n_scalar] for mk in masks]),
         reps=1 if smoke else 2)
@@ -94,7 +84,7 @@ def run(smoke: bool = False, backend: str = "both", snapshots: int = None):
         res = run_dcn_sweep(spec, backend=leg, masks=masks)
         assert _grids_equal(res, ref, n_scalar), f"{leg} grids != scalar"
         leg_results[leg] = res
-        leg_s = _time_runs(lambda: run_dcn_sweep(spec, backend=leg,
+        leg_s = time_runs(lambda: run_dcn_sweep(spec, backend=leg,
                                                  masks=masks))
         leg_rps = cells / leg_s
         speedup = leg_rps / scalar_rows_per_sec

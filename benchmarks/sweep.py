@@ -28,19 +28,10 @@ import numpy as np
 from repro.core.trace import generate_trace, to_4gpu_trace
 from repro.sim import ScenarioSpec, TraceSnapshots, run_sweep
 
-from .common import row, write_json
+from .common import row, time_runs, write_json
 
 ACCEPT_SNAPSHOTS = 1000
 ARCHES = ("infinitehbd-k3", "nvl-72", "tpuv4")
-
-
-def _time_runs(fn, reps: int = 3) -> float:
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best
 
 
 def run(smoke: bool = False, backend: str = "both", snapshots: int = None):
@@ -78,7 +69,7 @@ def run(smoke: bool = False, backend: str = "both", snapshots: int = None):
     numpy_res = run_sweep(spec, masks=masks, models=models, backend="numpy")
     if scalar_s is not None:
         assert np.array_equal(scalar_placed, numpy_res.placed_gpus)
-    numpy_s = _time_runs(lambda: run_sweep(spec, masks=masks, models=models,
+    numpy_s = time_runs(lambda: run_sweep(spec, masks=masks, models=models,
                                            backend="numpy"))
     payload["numpy_s"] = round(numpy_s, 4)
     scalar_speedup = (scalar_s / numpy_s) if scalar_s else None
@@ -102,7 +93,7 @@ def run(smoke: bool = False, backend: str = "both", snapshots: int = None):
         assert np.array_equal(jax_res.placed_gpus, numpy_res.placed_gpus)
         assert np.array_equal(jax_res.faulty_gpus, numpy_res.faulty_gpus)
         assert np.array_equal(jax_res.total_gpus, numpy_res.total_gpus)
-        jax_s = _time_runs(lambda: run_sweep(spec, masks=masks,
+        jax_s = time_runs(lambda: run_sweep(spec, masks=masks,
                                              models=models, backend="jax"))
         devices = jax_backend.num_devices()
         payload.update({"jax_s": round(jax_s, 4), "devices": devices,

@@ -1,0 +1,70 @@
+"""Cost-effectiveness sweep: the paper's §6.5 tables on the batched engine.
+
+Prints Table 6 (per-GPU interconnect cost/power, reproduced to the cent),
+the headline 30.86%-of-NVL-72 / 62.84%-of-TPUv4 interconnect-cost ratios,
+and a Fig. 17d-style aggregate-cost-vs-fault-ratio sweep (NVL-72
+normalized) through the batched ``repro.cost`` engine.
+
+Run:
+    PYTHONPATH=src python examples/cost_sweep.py [--smoke]
+
+``--smoke`` shrinks the sweep grid to CI size (seconds).
+"""
+
+import argparse
+
+from repro.cost import (CostSpec, cost_effectiveness_table,
+                        headline_ratio_rows, hosting_architectures,
+                        per_gpu_cost_table, run_cost_sweep)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--smoke", action="store_true",
+                   help="CI-sized grid (seconds)")
+    args = p.parse_args()
+
+    print("== Table 6: per-GPU interconnect cost & power ==")
+    print(f"{'architecture':<16} {'$/GPU':>10} {'W/GPU':>8} "
+          f"{'$/GPU/GBps':>11} {'W/GPU/GBps':>11}")
+    for r in per_gpu_cost_table():
+        print(f"{r['architecture']:<16} {r['per_gpu_cost']:>10.2f} "
+              f"{r['per_gpu_watts']:>8.2f} {r['per_gbps_cost']:>11.2f} "
+              f"{r['per_gbps_watts']:>11.2f}")
+
+    print("\n== §6.5 headline interconnect-cost ratios ==")
+    for r in headline_ratio_rows():
+        print(f"{r['pair']:<26} ours {r['ours']:.2%}   "
+              f"paper {r['paper']:.2%}")
+
+    spec = CostSpec(num_nodes=256 if args.smoke else 768,
+                    fault_ratios=(0.0, 0.02, 0.05, 0.08, 0.12, 0.15),
+                    samples=8 if args.smoke else 200,
+                    tp_sizes=(8, 32), seed=5)
+    result = run_cost_sweep(spec)            # numpy or device-sharded jax
+    # TP-32 is the paper's comparison; the §6.3 DGX baseline (8-GPU
+    # islands) can only host TP-8, so each view skips architectures with
+    # zero placeable capacity at that TP instead of printing a degenerate
+    # whole-cluster-stranded flat line.
+    for tp in (32, 8):
+        hosts = set(hosting_architectures(result, tp))
+        skipped = sorted(set(result.names) - hosts)
+        print(f"\n== Fig. 17d: aggregate cost vs fault ratio "
+              f"({spec.num_nodes * spec.gpus_per_node} GPUs, TP-{tp}, "
+              f"backend={result.backend}) =="
+              + (f"  [cannot host TP-{tp}: {', '.join(skipped)}]"
+                 if skipped else ""))
+        print(f"{'architecture':<16} {'fault':>6} {'mean cost $M':>13} "
+              f"{'vs NVL-72':>10}")
+        for row in cost_effectiveness_table(result, baseline="nvl-72",
+                                            tp=tp):
+            if row["architecture"] not in hosts:
+                continue
+            vs = row["vs_baseline"]
+            print(f"{row['architecture']:<16} {row['fault_ratio']:>6.2f} "
+                  f"{row['mean_cost_usd'] / 1e6:>13.3f} "
+                  f"{'--' if vs is None else f'{vs:>10.2%}'}")
+
+
+if __name__ == "__main__":
+    main()

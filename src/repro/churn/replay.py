@@ -77,8 +77,14 @@ def replay_trace(trace: FaultTrace, *, tp_sizes: Sequence[int] = (32,),
                  max_events: Optional[int] = None) -> ChurnTimeline:
     """Replay one trace into a :class:`ChurnTimeline`.
 
-    With ``job`` set, the control-plane replay runs too and its
-    :class:`ReconfigRecord` log is attached to the timeline.
+    The timeline's grids are ``(architectures A, fault-intervals B, TP
+    sizes T)``: one row per interval of ``trace.interval_edges()``,
+    evaluated through ``engine="batched"`` (one pass of the scenario
+    engine's ``evaluate_masks`` on the NumPy or device-sharded JAX
+    ``backend``) or ``engine="scalar"`` (event-by-event reference) --
+    bit-for-bit identical either way.  With ``job`` set, the
+    control-plane replay runs too and its :class:`ReconfigRecord` log
+    (Fig. 18's inputs) is attached to the timeline.
     """
     models = [make_model(a, trace.num_nodes, gpus_per_node)
               for a in architectures]

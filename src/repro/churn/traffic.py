@@ -97,10 +97,13 @@ def traffic_replay(trace: FaultTrace, *, tp_sizes: Sequence[int] = (32,),
                    chunk_snapshots: int = 4096) -> TrafficTimeline:
     """Evaluate every fault interval's placement traffic in one batched pass.
 
-    The interval occupancy masks (``trace.fault_masks(interval_edges())``)
-    stream through :func:`repro.dcn.evaluate_placements` exactly like the
-    churn waste replay streams through the scenario engine, so a whole
-    348-day trace reduces to a handful of vectorized kernel calls.
+    Returns a :class:`TrafficTimeline` with ``(variants V, fault-intervals
+    B, TP sizes T)`` pair-count grids.  The interval occupancy masks
+    (``trace.fault_masks(interval_edges())``) stream through
+    :func:`repro.dcn.evaluate_placements` exactly like the churn waste
+    replay streams through the scenario engine -- ``backend`` selects the
+    NumPy or device-sharded JAX placement kernel (identical grids) -- so a
+    whole 348-day trace reduces to a handful of vectorized kernel calls.
     """
     cfg = FatTreeConfig(trace.num_nodes, gpus_per_node, nodes_per_tor,
                         agg_domain, k)

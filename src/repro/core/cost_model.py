@@ -109,6 +109,44 @@ INFINITEHBD_K3 = ArchBOM("infinitehbd-k3", gpus=4, per_gpu_bw_gbps=800.0, compon
 ALL_BOMS: List[ArchBOM] = [TPUV4, NVL36, NVL72, NVL36X2, NVL576,
                            INFINITEHBD_K2, INFINITEHBD_K3]
 
+# Extension BOM -- NOT a Table 8 row.  The §6.3 DGX baseline (8-GPU NVLink
+# islands) has no published BOM in the paper; this board-level NVSwitch
+# estimate exists so the cost engine can price the dgx-h100 registry model
+# in the §6.5 comparison.  The assumption is flagged in
+# docs/ARCHITECTURE.md; tests pin the derived numbers so a silent edit
+# here cannot drift the published comparison.
+DGX_H100 = ArchBOM("dgx-h100", gpus=8, per_gpu_bw_gbps=900.0, components=[
+    Component("NVSwitch (baseboard)", 4, 3600.0, 3600.0, 100.0),
+])
+
+
+#: Registry-architecture name (``repro.sim.MODEL_REGISTRY``) -> BOM.  The
+#: idealized ``big-switch`` and the ring-static ``sip-ring`` models have no
+#: published BOM and are deliberately absent.
+BOM_REGISTRY: Dict[str, ArchBOM] = {
+    "infinitehbd-k2": INFINITEHBD_K2,
+    "infinitehbd-k3": INFINITEHBD_K3,
+    "nvl-36": NVL36,
+    "nvl-72": NVL72,
+    "nvl-576": NVL576,
+    "tpuv4": TPUV4,
+    "dgx-h100": DGX_H100,
+}
+
+
+def bom_for(architecture: str) -> ArchBOM:
+    """BOM for a ``repro.sim.MODEL_REGISTRY`` architecture name.
+
+    Raises ``KeyError`` (listing the priced architectures) for models
+    without a published BOM -- ``big-switch`` and ``sip-ring``.
+    """
+    try:
+        return BOM_REGISTRY[architecture]
+    except KeyError:
+        raise KeyError(
+            f"no BOM for architecture {architecture!r}; priced: "
+            f"{sorted(BOM_REGISTRY)}") from None
+
 
 def table6(include_hpn: bool = False) -> List[Dict[str, float]]:
     """Reproduce Table 6 (per-GPU and per-GPU-per-GBps cost & power)."""
@@ -125,6 +163,11 @@ def table6(include_hpn: bool = False) -> List[Dict[str, float]]:
 GPU_UNIT_COST = 25000.0  # H100-class accelerator; not given in the paper --
                          # any constant >> interconnect cost preserves Fig 17d
                          # ordering; we state the assumption in EXPERIMENTS.md.
+
+GPU_UNIT_POWER_W = 700.0  # H100 SXM board power -- same role as
+                          # GPU_UNIT_COST for the watts-per-delivered-MFU
+                          # bridge (repro.cost.bridge); assumption stated in
+                          # docs/ARCHITECTURE.md.
 
 
 def aggregate_cost(bom: ArchBOM, total_gpus: int, wasted_gpus: float,

@@ -204,8 +204,12 @@ def run_dcn_sweep(spec: DcnSpec, *, backend: str = "auto",
                   chunk_snapshots: int = 1024) -> DcnSweepResult:
     """Evaluate the full traffic grid through the batched kernels.
 
-    ``masks`` may supply one pre-materialized ``(samples, nodes)`` matrix
-    per fault ratio (the benchmarks do, so timing isolates the kernels).
+    Grid axes are ``(variants V, fault_ratios R, snapshots S, TP sizes
+    T)``; ``backend`` selects the NumPy or device-sharded JAX placement
+    kernel for the ``orchestrated`` variant (bit-identical grids either
+    way).  ``masks`` may supply one pre-materialized ``(samples, nodes)``
+    matrix per fault ratio (the benchmarks do, so timing isolates the
+    kernels).
     """
     chosen = resolve_backend(backend)
     cfg = spec.config

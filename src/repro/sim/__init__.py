@@ -1,5 +1,9 @@
 """Batched scenario engine: declarative fault sweeps over HBD architectures.
 
+Reproduces the paper's §6.2 resiliency evaluation (Figs. 13-16) as
+``(architectures x snapshots x TP)`` grid computations; see
+``docs/ARCHITECTURE.md`` for the full paper-reproduction matrix.
+
 Typical use::
 
     from repro.sim import ScenarioSpec, TraceSnapshots, run_sweep, waste_table

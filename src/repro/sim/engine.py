@@ -1,5 +1,10 @@
 """Batched sweep runner: evaluate a ScenarioSpec grid in vectorized chunks.
 
+Reproduces the paper's §6.2 fault-resiliency figures (Figs. 13-16: waste
+ratio, max job scale, fault-waiting share) at grid scale; the churn
+(Fig. 18), traffic (Fig. 17) and cost (§6.5) engines all consume the
+grids it produces.
+
 The engine materializes the snapshot fault-mask matrix once, then runs every
 architecture's vectorized ``evaluate_batch`` kernel over it, chunking the
 snapshot axis so datacenter-scale sweeps (100k nodes x thousands of
@@ -68,7 +73,14 @@ def resolve_backend(backend: Optional[str],
 
 @dataclasses.dataclass
 class SweepResult:
-    """Dense result grid of one scenario sweep."""
+    """Dense result grid of one scenario sweep.
+
+    Grid axes are ``(architectures A, snapshots S, TP sizes T)`` for the
+    per-snapshot counts; ``total_gpus`` is ``(A, T)`` because TP-granular
+    models round the modeled cluster to whole groups.  ``backend`` records
+    which compute path produced the grids -- they are bit-for-bit
+    identical either way.
+    """
 
     spec: ScenarioSpec
     names: List[str]         # architecture names, grid axis 0
