@@ -19,10 +19,10 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.cost import (CostSpec, cost_effectiveness_table,
-                        headline_ratio_rows, hosting_architectures,
-                        per_gpu_cost_table, run_cost_sweep,
-                        run_cost_sweep_scalar)
+from repro.cost import (CostSpec, DEFAULT_COST_ARCHITECTURES,
+                        cost_effectiveness_table, headline_ratio_rows,
+                        hosting_architectures, per_gpu_cost_table,
+                        run_cost_sweep, run_cost_sweep_scalar)
 from repro.sim import jax_backend
 
 from .common import row, time_runs, write_json
@@ -30,6 +30,9 @@ from .common import row, time_runs, write_json
 ACCEPT_SAMPLES = 200
 RATIOS = (0.0, 0.02, 0.05, 0.08, 0.12, 0.15)
 SPEEDUP_GATE = 10.0
+#: §6.5 comparison set plus the priced rivals from the registry zoo
+#: (repro.archs) -- same dollar grids, same bit-exactness gates.
+ARCHES = DEFAULT_COST_ARCHITECTURES + ("rail-only", "railx")
 
 #: Table 6 as printed in the paper (per-GPU USD) -- the engine must hit
 #: these to the cent; a drift in the BOMs fails the benchmark, not just
@@ -70,7 +73,8 @@ def run(smoke: bool = False, backend: str = "both", snapshots: int = None):
 
     # Fig. 17d grid: fault_ratio x architecture x snapshot x TP.
     spec = CostSpec(num_nodes=256 if smoke else 768, fault_ratios=RATIOS,
-                    samples=samples, tp_sizes=(8, 32), seed=5)
+                    samples=samples, tp_sizes=(8, 32), seed=5,
+                    architectures=ARCHES)
     cells = len(RATIOS) * samples
     payload.update(num_nodes=spec.num_nodes, tp_sizes=list(spec.tp_sizes),
                    architectures=list(spec.architectures))

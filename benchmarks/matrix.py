@@ -1,0 +1,103 @@
+"""Cross-paper comparison matrix: the rival zoo under identical faults.
+
+Evaluates every registered architecture (InfiniteHBD variants, NVLink
+generations, TPUv4, the Rail-only and RailX rivals, the DGX baseline, the
+idealized big switch) through :func:`repro.sim.comparison_matrix` -- one
+row per (architecture, fault ratio) with the three headline axes side by
+side: snapshot-mean waste ratio, cross-ToR traffic share of the
+architecture's registered placement variant, and $/MFU-GPU-hour from the
+Table-8 BOMs under the delivered (elastic-DP) MFU.  All architectures see
+*identical* counter-threefry fault grids, so the rows are comparable
+across papers, and the matrix is asserted bit-for-bit identical between
+the numpy and jax backends.
+
+Results are persisted as ``BENCH_matrix.json``.  Standalone entry point::
+
+    python -m benchmarks.matrix [--smoke] [--backend {numpy,jax,both}]
+                                [--snapshots N]
+"""
+
+from __future__ import annotations
+
+from repro.core import arch
+from repro.sim import comparison_matrix, jax_backend, to_csv
+
+from .common import row, time_runs, write_json
+
+RATIOS = (0.0, 0.02, 0.05, 0.10)
+ACCEPT_SAMPLES = 25
+
+
+def run(smoke: bool = False, backend: str = "both", snapshots: int = None):
+    samples = snapshots or (8 if smoke else ACCEPT_SAMPLES)
+    num_nodes = 256 if smoke else 512
+    arches = arch.names()
+    payload = {"smoke": smoke, "num_nodes": num_nodes, "tp_size": 32,
+               "samples": samples, "fault_ratios": list(RATIOS),
+               "architectures": list(arches)}
+
+    jax_ok = jax_backend.HAVE_JAX
+    if backend == "jax" and not jax_ok:
+        raise RuntimeError("--backend jax requested but jax is unavailable")
+    legs = (["numpy"] if backend in ("numpy", "both") else []) \
+        + (["jax"] if backend in ("jax", "both") and jax_ok else [])
+    results, rows = {}, None
+    for leg in legs:
+        leg_s = time_runs(lambda: results.__setitem__(
+            leg, comparison_matrix(num_nodes, fault_ratios=RATIOS,
+                                   samples=samples, backend=leg)), reps=1)
+        payload[f"{leg}_s"] = round(leg_s, 4)
+        row(f"matrix/{leg}/archs{len(arches)}/nodes{num_nodes}",
+            leg_s * 1e6, {"rows": len(results[leg])})
+        if leg == "jax":
+            payload["devices"] = jax_backend.num_devices()
+    payload["backends"] = legs
+
+    # Bit-exactness contract: the matrix's waste / traffic / economics
+    # columns are host float64 reductions over backend-bit-identical int64
+    # grids, so the rows must agree exactly -- not approximately.
+    if "numpy" in results and "jax" in results:
+        assert results["numpy"] == results["jax"], \
+            "comparison matrix differs between numpy and jax backends"
+        payload["bit_exact_backends"] = True
+    else:
+        payload["bit_exact_backends"] = len(legs) > 1
+    rows = results[legs[0]]
+
+    for r in rows:
+        row(f"matrix/{r['architecture']}/fault{r['fault_ratio']:.2f}", 0.0,
+            {"waste": round(r["waste_ratio"], 4),
+             "cross_tor": None if r["cross_tor_share"] is None
+             else round(r["cross_tor_share"], 4),
+             "usd_per_mfu_gpu_h": None if r["usd_per_mfu_gpu_h"] is None
+             else round(r["usd_per_mfu_gpu_h"], 4)})
+    payload["rows"] = [
+        {**r, "waste_ratio": round(r["waste_ratio"], 6),
+         "mean_mfu": round(r["mean_mfu"], 6),
+         "cross_tor_share": None if r["cross_tor_share"] is None
+         else round(r["cross_tor_share"], 6),
+         "usd_per_mfu_gpu_h": None if r["usd_per_mfu_gpu_h"] is None
+         else round(r["usd_per_mfu_gpu_h"], 6)}
+        for r in rows]
+    payload["csv"] = to_csv(rows)
+    write_json("matrix", payload)
+    return payload
+
+
+def main():
+    import argparse
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--smoke", action="store_true",
+                   help="CI-sized grid")
+    p.add_argument("--backend", choices=("numpy", "jax", "both"),
+                   default="both")
+    p.add_argument("--snapshots", type=int, default=None,
+                   help="samples per fault ratio (default: 8 smoke / "
+                        f"{ACCEPT_SAMPLES} full)")
+    args = p.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, backend=args.backend, snapshots=args.snapshots)
+
+
+if __name__ == "__main__":
+    main()

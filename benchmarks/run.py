@@ -19,7 +19,7 @@ import sys
 import traceback
 
 SECTIONS = ("waste_ratio", "max_job", "fault_waiting", "sweep", "churn",
-            "dcn", "mfu_tables", "orchestration", "cost",
+            "dcn", "mfu_tables", "orchestration", "cost", "matrix",
             "collectives_bench", "kernels_bench", "roofline")
 
 

@@ -31,7 +31,10 @@ from repro.sim import ScenarioSpec, TraceSnapshots, run_sweep
 from .common import row, time_runs, write_json
 
 ACCEPT_SNAPSHOTS = 1000
-ARCHES = ("infinitehbd-k3", "nvl-72", "tpuv4")
+#: Paper suite plus the rival zoo (repro.archs): the registry's rival
+#: architectures go through the same scalar / numpy / jax matrix and the
+#: same bit-exactness assertions as the paper's own.
+ARCHES = ("infinitehbd-k3", "nvl-72", "tpuv4", "rail-only", "railx")
 
 
 def run(smoke: bool = False, backend: str = "both", snapshots: int = None):

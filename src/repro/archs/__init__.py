@@ -1,0 +1,19 @@
+"""Rival network architectures, one self-contained module each.
+
+Every module in this package defines one architecture end to end -- the
+scalar reference model, the batched NumPy kernel, the JAX kernel builder,
+the Table-8-style BOM (or unpriceable marker) and the DCN placement hook --
+and hands the bundle to :func:`repro.core.arch.register` as a single
+:class:`~repro.core.arch.ArchSpec`.  That registration is the *only*
+wiring an architecture needs: the sim/dcn/cost/churn engines all consume
+the registry.
+
+The package is imported lazily by ``repro.core.arch`` on first registry
+access, so modules here must not import ``repro.sim`` (or anything that
+imports it) at module level -- defer device-backend imports into the
+kernel builder, which only runs once a JAX sweep is requested.
+"""
+
+from . import rail_only, railx
+
+__all__ = ["rail_only", "railx"]

@@ -10,6 +10,7 @@ paper's §6.5 formula:
 from __future__ import annotations
 
 import dataclasses
+from collections.abc import Mapping
 from typing import Dict, List, Optional, Sequence
 
 
@@ -120,18 +121,31 @@ DGX_H100 = ArchBOM("dgx-h100", gpus=8, per_gpu_bw_gbps=900.0, components=[
 ])
 
 
-#: Registry-architecture name (``repro.sim.MODEL_REGISTRY``) -> BOM.  The
-#: idealized ``big-switch`` and the ring-static ``sip-ring`` models have no
-#: published BOM and are deliberately absent.
-BOM_REGISTRY: Dict[str, ArchBOM] = {
-    "infinitehbd-k2": INFINITEHBD_K2,
-    "infinitehbd-k3": INFINITEHBD_K3,
-    "nvl-36": NVL36,
-    "nvl-72": NVL72,
-    "nvl-576": NVL576,
-    "tpuv4": TPUV4,
-    "dgx-h100": DGX_H100,
-}
+class _BomRegistryView(Mapping):
+    """Live ``name -> ArchBOM`` view over the priced architectures of the
+    ``repro.core.arch`` registry.  The import is deferred because ``arch``
+    imports this module for the Table-8 constants above; each ArchSpec
+    either carries a BOM (listed here) or an explicit unpriceable marker
+    (absent here -- ``big-switch`` and ``sip-ring``)."""
+
+    def _view(self) -> Mapping:
+        from .arch import PRICED_BOMS
+        return PRICED_BOMS
+
+    def __getitem__(self, key: str) -> ArchBOM:
+        return self._view()[key]
+
+    def __iter__(self):
+        return iter(self._view())
+
+    def __len__(self) -> int:
+        return len(self._view())
+
+
+#: Registry-architecture name (``repro.sim.MODEL_REGISTRY``) -> BOM, now a
+#: live view over ``repro.core.arch``: registering an ArchSpec with a BOM
+#: is the single wiring step that prices an architecture everywhere.
+BOM_REGISTRY: Mapping[str, ArchBOM] = _BomRegistryView()
 
 
 def bom_for(architecture: str) -> ArchBOM:

@@ -116,6 +116,17 @@ class HBDModel:
     def evaluate(self, faults: Set[int], tp_size: int) -> WasteResult:
         raise NotImplementedError
 
+    def static_key(self) -> tuple:
+        """Hashable static identity of the model's kernel configuration --
+        the JAX backend's jit-cache key.  Subclasses contribute their extra
+        constructor knobs via ``_static_config`` so two instances compare
+        equal exactly when their compiled kernels would."""
+        return ((type(self).__name__, self.num_nodes, self.gpus_per_node)
+                + self._static_config())
+
+    def _static_config(self) -> tuple:
+        return ()
+
     def evaluate_batch(self, fault_masks: np.ndarray,
                        tp_sizes: Sequence[int]) -> BatchedWasteResult:
         """Evaluate every (snapshot, TP size) pair of the grid.
@@ -188,6 +199,9 @@ class InfiniteHBDModel(HBDModel):
         self.k = k
         self.closed_ring = closed_ring
         self.name = f"infinitehbd-k{k}"
+
+    def _static_config(self) -> tuple:
+        return (self.k, self.closed_ring)
 
     def evaluate(self, faults: Set[int], tp_size: int) -> WasteResult:
         m = max(1, tp_size // self.gpus_per_node)
@@ -312,6 +326,9 @@ class NVLModel(HBDModel):
         self.spare_fraction = spare_fraction
         self.name = f"nvl-{hbd_gpus}"
 
+    def _static_config(self) -> tuple:
+        return (self.hbd_gpus, self.spare_fraction)
+
     def evaluate(self, faults: Set[int], tp_size: int) -> WasteResult:
         nodes_per_hbd = self.hbd_gpus // self.gpus_per_node
         n_hbd = self.num_nodes // nodes_per_hbd
@@ -364,6 +381,9 @@ class TPUv4Model(HBDModel):
     def __init__(self, num_nodes: int, gpus_per_node: int = 4, cube_gpus: int = 64):
         super().__init__(num_nodes, gpus_per_node)
         self.cube_gpus = cube_gpus
+
+    def _static_config(self) -> tuple:
+        return (self.cube_gpus,)
 
     def evaluate(self, faults: Set[int], tp_size: int) -> WasteResult:
         nodes_per_cube = self.cube_gpus // self.gpus_per_node

@@ -23,7 +23,8 @@ regular.
 """
 
 from .engine import (DcnSpec, DcnSweepResult, VARIANTS, evaluate_placements,
-                     resolve_backend, run_dcn_sweep, run_dcn_sweep_scalar)
+                     resolve_backend, run_dcn_sweep, run_dcn_sweep_scalar,
+                     variant_for)
 from .incremental import IncrementalFatTreeOrchestrator
 from .kernel import (BatchedPlacement, FatTreeConfig, batched_dgx_island,
                      batched_fat_tree, batched_greedy, batched_pair_counts,
@@ -38,5 +39,5 @@ __all__ = [
     "batched_pair_counts", "cross_tor_curve", "dgx_island_placement",
     "dp_tp_bytes", "dp_tp_ratio", "evaluate_placements", "line_carve",
     "resolve_backend", "run_dcn_sweep", "run_dcn_sweep_scalar",
-    "traffic_tables",
+    "traffic_tables", "variant_for",
 ]

@@ -41,6 +41,24 @@ VARIANTS: Tuple[str, ...] = ("orchestrated", "greedy", "dgx-island")
 _COUNT_KEYS = ("groups", "dp_pairs", "crossing_pairs", "crossing_pod_pairs")
 
 
+def variant_for(architecture: str) -> Optional[str]:
+    """Placement variant of a registered architecture -- the registry's
+    traffic-model hook (``repro.core.arch.ArchSpec.placement_variant``).
+
+    ``None`` means the architecture has no DCN topology model (the
+    idealized ``big-switch``); an unknown architecture raises the
+    registry's instructive KeyError, and a spec declaring a variant this
+    engine does not implement raises ``ValueError``.
+    """
+    from ..core import arch
+    variant = arch.get(architecture).placement_variant
+    if variant is not None and variant not in VARIANTS:
+        raise ValueError(
+            f"architecture {architecture!r} declares placement variant "
+            f"{variant!r}; this engine implements {VARIANTS}")
+    return variant
+
+
 def resolve_backend(backend: Optional[str]) -> str:
     """Resolve ``backend`` ("auto"/None reads ``REPRO_SWEEP_BACKEND``).
 

@@ -21,11 +21,12 @@ from .engine import (BACKENDS, SweepResult, evaluate_masks, resolve_backend,
 from .scenario import (CounterIIDSnapshots, DEFAULT_ARCHITECTURES,
                        IIDSnapshots, MODEL_REGISTRY, ScenarioSpec,
                        TraceSnapshots, make_model)
-from .tables import fault_waiting_table, max_job_table, to_csv, waste_table
+from .tables import (comparison_matrix, fault_waiting_table, max_job_table,
+                     to_csv, waste_table)
 # DCN traffic axis of the sweep engine (Fig. 17): the batched fat-tree
 # placement kernels live in repro.dcn; the spec/sweep/reduction trio is
 # re-exported here so traffic sweeps sit next to the waste sweeps.
-from ..dcn.engine import DcnSpec, run_dcn_sweep
+from ..dcn.engine import DcnSpec, run_dcn_sweep, variant_for
 from ..dcn.tables import traffic_tables
 
 __all__ = [
@@ -34,5 +35,6 @@ __all__ = [
     "ScenarioSpec", "TraceSnapshots", "IIDSnapshots", "CounterIIDSnapshots",
     "MODEL_REGISTRY", "DEFAULT_ARCHITECTURES", "make_model",
     "waste_table", "max_job_table", "fault_waiting_table", "to_csv",
-    "DcnSpec", "run_dcn_sweep", "traffic_tables",
+    "comparison_matrix",
+    "DcnSpec", "run_dcn_sweep", "traffic_tables", "variant_for",
 ]

@@ -213,32 +213,39 @@ _KERNELS: Dict[Type[HBDModel], Callable] = {
 }
 
 
+def _builder_for(model: HBDModel) -> Optional[Callable]:
+    """Kernel builder of one model: the type-keyed builtin table first,
+    then the model's ``repro.core.arch`` spec (external architectures ship
+    their builder in ``ArchSpec.jax_kernel``)."""
+    builder = _KERNELS.get(type(model))
+    if builder is None:
+        from ..core import arch
+        spec = arch.find(model.name)
+        builder = spec.jax_kernel if spec is not None else None
+    return builder
+
+
 def _model_key(model: HBDModel) -> Tuple:
-    """Static identity of a model's compiled kernel (for the jit cache)."""
-    base = (type(model).__name__, model.num_nodes, model.gpus_per_node)
-    if type(model) is InfiniteHBDModel:
-        return base + (model.k, model.closed_ring)
-    if type(model) is NVLModel:
-        return base + (model.hbd_gpus, model.spare_fraction)
-    if type(model) is TPUv4Model:
-        return base + (model.cube_gpus,)
-    return base
+    """Static identity of a model's compiled kernel (for the jit cache):
+    the model's own ``static_key`` (type name + geometry + the subclass's
+    ``_static_config`` knobs)."""
+    return model.static_key()
 
 
 def available_for(models: Sequence[HBDModel]) -> bool:
     """True when JAX is importable and every model has a jnp kernel."""
-    return HAVE_JAX and all(type(m) in _KERNELS for m in models)
+    return HAVE_JAX and all(_builder_for(m) is not None for m in models)
 
 
 def require(models: Sequence[HBDModel]) -> None:
     if not HAVE_JAX:
         raise RuntimeError(
             f"backend='jax' requested but jax is unavailable ({_IMPORT_ERROR!r})")
-    missing = [m.name for m in models if type(m) not in _KERNELS]
+    missing = [m.name for m in models if _builder_for(m) is None]
     if missing:
         raise RuntimeError(
             f"backend='jax' has no kernel for model(s) {missing}; "
-            f"use backend='numpy'")
+            f"use backend='numpy' or register an ArchSpec.jax_kernel")
 
 
 # ------------------------------------------------------------- grid runner
@@ -304,7 +311,7 @@ def _grid_fn(models: Sequence[HBDModel], tps: Sequence[int], mesh,
     if fn is not None:
         return fn
 
-    kernels = [_KERNELS[type(m)](m, tps) for m in models]
+    kernels = [_builder_for(m)(m, tps) for m in models]
 
     def eval_mask(mask):
         return jnp.stack([jnp.stack(kfn(mask)) for kfn in kernels])

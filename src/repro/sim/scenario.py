@@ -13,56 +13,37 @@ Snapshot sources:
 
 Architectures are referenced by registry name (``big-switch``,
 ``infinitehbd-k3``, ``nvl-72``, ``tpuv4``, ``sip-ring``, ...), matching the
-``HBDModel.name`` attributes of the §6.1 evaluation suite.
+``HBDModel.name`` attributes of the §6.1 evaluation suite.  The registry
+itself lives in :mod:`repro.core.arch` -- one :class:`~repro.core.arch.\
+ArchSpec` per architecture bundling the model factory, the BOM (or
+unpriceable marker), the DCN placement hook and the device kernel --
+``MODEL_REGISTRY`` here is a live name->factory view over it.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.hbd_models import (BigSwitch, HBDModel, InfiniteHBDModel,
-                               NVLModel, SiPRingModel, TPUv4Model)
+from ..core import arch
+from ..core.arch import ModelFactory, make_model  # noqa: F401 (re-export)
+from ..core.hbd_models import HBDModel
 from ..core.prng import counter_fault_masks
 from ..core.trace import generate_trace, iid_fault_masks, to_4gpu_trace
 
-ModelFactory = Callable[[int, int], HBDModel]
+#: Live read-only ``name -> factory`` view over the ``repro.core.arch``
+#: registry: architectures registered later (e.g. by external modules)
+#: appear here without further wiring.
+MODEL_REGISTRY: Mapping[str, ModelFactory] = arch.MODEL_FACTORIES
 
-
-def _dgx_model(n: int, g: int) -> NVLModel:
-    """DGX-class 8-GPU NVLink islands, no optical spares (paper §6.3's
-    DGX baseline for the MFU comparison)."""
-    m = NVLModel(n, g, hbd_gpus=8, spare_fraction=0.0)
-    m.name = "dgx-h100"
-    return m
-
-
-MODEL_REGISTRY: Dict[str, ModelFactory] = {
-    "big-switch": lambda n, g: BigSwitch(n, g),
-    "infinitehbd-k2": lambda n, g: InfiniteHBDModel(n, g, k=2),
-    "infinitehbd-k3": lambda n, g: InfiniteHBDModel(n, g, k=3),
-    "nvl-36": lambda n, g: NVLModel(n, g, hbd_gpus=36),
-    "nvl-72": lambda n, g: NVLModel(n, g, hbd_gpus=72),
-    "nvl-576": lambda n, g: NVLModel(n, g, hbd_gpus=576, spare_fraction=0.0),
-    "tpuv4": lambda n, g: TPUv4Model(n, g),
-    "sip-ring": lambda n, g: SiPRingModel(n, g),
-    "dgx-h100": _dgx_model,
-}
-
-#: The §6.1 comparison suite, in paper order (the DGX island model is
-#: registered for the churn/MFU comparisons but not part of default sweeps).
-DEFAULT_ARCHITECTURES: Tuple[str, ...] = tuple(
-    a for a in MODEL_REGISTRY if a != "dgx-h100")
-
-
-def make_model(name: str, num_nodes: int, gpus_per_node: int = 4) -> HBDModel:
-    try:
-        return MODEL_REGISTRY[name](num_nodes, gpus_per_node)
-    except KeyError:
-        raise KeyError(f"unknown architecture {name!r}; "
-                       f"registered: {sorted(MODEL_REGISTRY)}") from None
+#: The default comparison suite, in registration (= §6.1 paper) order:
+#: every architecture whose spec sets ``default_sweep=True``.  The DGX
+#: island model and the rival-zoo architectures are registered for the
+#: churn/MFU/matrix comparisons but opt out of default sweeps via that
+#: registry attribute (``repro.core.arch.ArchSpec.default_sweep``).
+DEFAULT_ARCHITECTURES: Tuple[str, ...] = arch.default_architectures()
 
 
 @dataclasses.dataclass(frozen=True)

@@ -237,8 +237,9 @@ if HAVE_HYPOTHESIS:
     @settings(max_examples=30, deadline=None)
     def test_aggregate_cost_monotone_in_fault_set(faults, extra, tp):
         """Adding faults never lowers the §6.5 aggregate cost (more
-        stranded GPUs, same interconnect capex) -- on every priced model."""
-        for arch in ("infinitehbd-k2", "nvl-72", "tpuv4", "dgx-h100"):
+        stranded GPUs, same interconnect capex) -- on every priced model
+        in the registry (rival zoo included), not a hand-kept list."""
+        for arch in sorted(BOM_REGISTRY):
             model = make_model(arch, 96)
             bom = bom_for(arch)
             a = model.evaluate(faults, tp)

@@ -1,0 +1,254 @@
+"""ArchSpec registry: the one contract every architecture signs.
+
+Covers the registry itself (names, live views, validation, registration
+errors with instructions), the rival zoo (``repro.archs``: Rail-only and
+RailX semantics + BOM pins), registry-wide invariants asserted for *all*
+architectures at once (batched == scalar bit-for-bit, fault monotonicity,
+conservation bounds -- hypothesis when available, seeded NumPy otherwise),
+and the cross-paper comparison matrix (identical fault grids, bit-for-bit
+across backends).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import arch
+from repro.core.arch import ArchSpec, make_model, register
+from repro.core.cost_model import BOM_REGISTRY, bom_for
+from repro.core.hbd_models import HBDModel
+
+#: The full registered zoo, pinned -- a rival module that fails to
+#: register (or an accidental extra registration) fails here first.
+EXPECTED_NAMES = (
+    "big-switch", "infinitehbd-k2", "infinitehbd-k3", "nvl-36", "nvl-72",
+    "nvl-576", "tpuv4", "sip-ring", "dgx-h100", "rail-only", "railx",
+)
+
+AWKWARD_TPS = [4, 8, 16, 24, 32, 48, 64, 128]
+
+
+# ---------------------------------------------------------- registry shape
+
+def test_registry_names_pinned():
+    assert arch.names() == EXPECTED_NAMES
+
+
+def test_default_architectures_are_the_default_sweep_specs():
+    # dgx-h100 and the rivals opt out of the §6.1 default suite via
+    # default_sweep=False -- an attribute, not a hard-coded exclusion
+    assert arch.default_architectures() == EXPECTED_NAMES[:8]
+    from repro.sim import DEFAULT_ARCHITECTURES
+    assert DEFAULT_ARCHITECTURES == arch.default_architectures()
+    for name in ("dgx-h100", "rail-only", "railx"):
+        assert not arch.get(name).default_sweep
+
+
+def test_live_views_cover_registry():
+    from repro.sim import MODEL_REGISTRY
+    assert tuple(MODEL_REGISTRY) == EXPECTED_NAMES
+    assert tuple(MODEL_REGISTRY) == tuple(arch.MODEL_FACTORIES)
+    # the BOM view shows exactly the priced specs, and cost_model's
+    # BOM_REGISTRY is the same live view
+    priced = tuple(s.name for s in arch.specs() if s.bom is not None)
+    assert tuple(arch.PRICED_BOMS) == priced
+    assert tuple(BOM_REGISTRY) == priced
+    for name in priced:
+        assert BOM_REGISTRY[name] is arch.get(name).bom
+        assert bom_for(name) is arch.get(name).bom
+
+
+def test_every_spec_is_priced_xor_unpriceable():
+    for spec in arch.specs():
+        assert (spec.bom is None) != (spec.unpriceable is None), spec.name
+        assert spec.priced == (spec.bom is not None)
+        if spec.bom is not None:
+            assert spec.bom.name == spec.name
+
+
+def test_placement_variants_are_implemented():
+    from repro.dcn import VARIANTS, variant_for
+    for spec in arch.specs():
+        assert variant_for(spec.name) == spec.placement_variant
+        if spec.placement_variant is not None:
+            assert spec.placement_variant in VARIANTS
+
+
+def test_unknown_architecture_error_carries_instructions():
+    with pytest.raises(KeyError) as exc:
+        make_model("nvl-9000", 64)
+    msg = str(exc.value)
+    assert "nvl-9000" in msg
+    assert "infinitehbd-k3" in msg          # lists what IS registered
+    assert "register" in msg                # ... and how to add one
+    assert "_batch_eval" in msg             # the contract fields
+
+
+def test_register_validates_the_contract():
+    ok = arch.get("railx")
+    with pytest.raises(ValueError, match="already registered"):
+        register(ok)
+    with pytest.raises(ValueError, match="exactly one of"):
+        register(ArchSpec(name="x1", factory=ok.factory))
+    with pytest.raises(ValueError, match="exactly one of"):
+        register(ArchSpec(name="x2", factory=ok.factory,
+                          bom=ok.bom, unpriceable="both set"))
+    with pytest.raises(ValueError, match="BOM named"):
+        register(ArchSpec(name="x3", factory=ok.factory, bom=ok.bom))
+    with pytest.raises(ValueError, match="built a model named"):
+        register(ArchSpec(name="x4", factory=ok.factory,
+                          unpriceable="name mismatch"))
+
+    class NoBatch(HBDModel):
+        name = "x5"
+
+        def evaluate(self, faults, tp_size):    # pragma: no cover - probe
+            return super().evaluate(faults, tp_size)
+
+    with pytest.raises(TypeError, match="batched"):
+        register(ArchSpec(name="x5", factory=lambda n, g: NoBatch(n, g),
+                          unpriceable="no batch kernel"))
+    assert not any(n.startswith("x") for n in arch.names())  # nothing leaked
+
+
+# -------------------------------------------------------------- rival zoo
+
+def test_rail_only_bom_pinned():
+    bom = bom_for("rail-only")
+    # one 256-GPU HB domain priced like an NVL pod: $9563.20/GPU
+    assert round(bom.per_gpu_cost, 2) == 9563.20
+    assert arch.get("rail-only").paper.startswith("Rail-only")
+
+
+def test_railx_bom_pinned():
+    bom = bom_for("railx")
+    # per 4-GPU node: 2 DAC rails + 8 OCSTrx shares + fiber = $1313.40/GPU
+    assert round(bom.per_gpu_cost, 2) == 1313.40
+    assert arch.get("railx").paper.startswith("RailX")
+
+
+def test_rail_only_is_a_256_gpu_domain_without_spares():
+    model = make_model("rail-only", 256)        # 1024 GPUs = 4 HB domains
+    assert model.hbd_gpus == 256
+    assert model.spare_fraction == 0.0
+    assert model.evaluate(set(), 32).placed_gpus == 1024
+    # at TP-256 a domain is all-or-nothing: one node fault (no optical
+    # spares to splice in) knocks its whole 256-GPU domain out
+    assert model.evaluate(set(), 256).placed_gpus == 1024
+    assert model.evaluate({0}, 256).placed_gpus == 768
+
+
+def test_railx_strands_interior_segments_only():
+    model = make_model("railx", 128)            # 2 rows of 64 nodes
+    g, L = 4, 64
+    # fault-free: the spliced ring carves perfectly
+    assert model.evaluate(set(), 32).placed_gpus == 128 * g
+    # one mid-row fault: head run + tail run survive, 1 node lost
+    r = model.evaluate({10}, 8)
+    assert r.placed_gpus == (10 + (L - 11) + L) // 2 * 2 * g
+    # two faults in one row: the healthy run BETWEEN them is stranded
+    r2 = model.evaluate({10, 50}, 8)
+    assert r2.placed_gpus == (10 + (L - 51) + L) // 2 * 2 * g
+    # same two faults in different rows keep their head+tail runs
+    r3 = model.evaluate({10, L + 50}, 8)
+    assert r3.placed_gpus == (10 + (L - 11) + 50 + (L - 51)) // 2 * 2 * g
+
+
+# ---------------------------------------------- registry-wide invariants
+
+def _all_models(num_nodes=96, gpus_per_node=4):
+    return [make_model(n, num_nodes, gpus_per_node) for n in arch.names()]
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_batched_equals_scalar_for_every_registered_arch(seed):
+    rng = np.random.default_rng(seed)
+    num_nodes = 96 if seed % 2 else 257
+    masks = rng.random((10, num_nodes)) < rng.uniform(0.0, 0.25)
+    for model in _all_models(num_nodes):
+        grid = model.evaluate_batch(masks, AWKWARD_TPS)
+        for si in range(masks.shape[0]):
+            faults = set(np.nonzero(masks[si])[0].tolist())
+            for ti, tp in enumerate(AWKWARD_TPS):
+                ref = model.evaluate(faults, tp)
+                got = grid.result(si, ti)
+                assert (got.total_gpus, got.faulty_gpus, got.placed_gpus) \
+                    == (ref.total_gpus, ref.faulty_gpus, ref.placed_gpus), \
+                    (model.name, si, tp)
+
+
+def _check_invariants(faults, extra, tp):
+    """More faults never place more GPUs; counts stay conserved."""
+    for model in _all_models():
+        a = model.evaluate(faults, tp)
+        b = model.evaluate(faults | extra, tp)
+        for r in (a, b):
+            assert 0 <= r.placed_gpus <= r.total_gpus - r.faulty_gpus, \
+                model.name
+            assert r.placed_gpus + r.wasted_gpus + r.faulty_gpus \
+                == r.total_gpus, model.name
+        assert b.placed_gpus <= a.placed_gpus, (model.name, tp)
+        assert b.faulty_gpus >= a.faulty_gpus, (model.name, tp)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @given(st.sets(st.integers(0, 95), max_size=30),
+           st.sets(st.integers(0, 95), max_size=10),
+           st.sampled_from([8, 24, 32]))
+    @settings(max_examples=25, deadline=None)
+    def test_registry_invariants_hold_for_all_archs(faults, extra, tp):
+        _check_invariants(faults, extra, tp)
+else:                                                  # pragma: no cover
+    @pytest.mark.parametrize("seed", range(8))
+    def test_registry_invariants_hold_for_all_archs(seed):
+        rng = np.random.default_rng(seed)
+        faults = set(rng.choice(96, size=rng.integers(0, 30),
+                                replace=False).tolist())
+        extra = set(rng.choice(96, size=rng.integers(0, 10),
+                               replace=False).tolist())
+        _check_invariants(faults, extra, int(rng.choice([8, 24, 32])))
+
+
+# ------------------------------------------------------ comparison matrix
+
+def _small_matrix(backend):
+    from repro.sim import comparison_matrix
+    # 144 nodes = 576 GPUs: the smallest grid where every registered
+    # architecture (nvl-576 included) models a non-empty cluster
+    return comparison_matrix(144, fault_ratios=(0.0, 0.05), samples=6,
+                             tp=32, seed=3, backend=backend)
+
+
+def test_comparison_matrix_rows_cover_the_zoo():
+    rows = _small_matrix("numpy")
+    assert len(rows) == len(EXPECTED_NAMES) * 2
+    by_arch = {}
+    for r in rows:
+        by_arch.setdefault(r["architecture"], []).append(r)
+    assert set(by_arch) == set(EXPECTED_NAMES)
+    for name, rs in by_arch.items():
+        spec = arch.get(name)
+        for r in rs:
+            assert r["paper"] == spec.paper
+            assert r["priced"] == spec.priced
+            assert 0.0 <= r["waste_ratio"] <= 1.0
+            if spec.bom is None:
+                assert r["usd_per_mfu_gpu_h"] is None
+            if spec.placement_variant is None:
+                assert r["cross_tor_share"] is None
+    # identical fault grids: the idealized big switch wastes no less than
+    # anyone at every ratio (it only loses the faulty nodes themselves)
+    for ri, ratio in enumerate((0.0, 0.05)):
+        best = by_arch["big-switch"][ri]["waste_ratio"]
+        for name, rs in by_arch.items():
+            assert rs[ri]["waste_ratio"] >= best - 1e-12, (name, ratio)
+
+
+def test_comparison_matrix_bit_exact_across_backends():
+    pytest.importorskip("jax")
+    assert _small_matrix("numpy") == _small_matrix("jax")

@@ -21,6 +21,7 @@ from repro.core.fault_sim import (fault_waiting_time,
                                   waste_over_trace_batched,
                                   waste_vs_fault_ratio,
                                   waste_vs_fault_ratio_batched)
+from repro.core.arch import make_model, names as arch_names
 from repro.core.hbd_models import InfiniteHBDModel, default_suite
 from repro.core.orchestrator import (IncrementalOrchestrator,
                                      deployment_strategy,
@@ -38,7 +39,10 @@ def test_evaluate_batch_matches_scalar(seed, num_nodes):
     rng = np.random.default_rng(seed)
     ratio = rng.uniform(0.0, 0.3)
     masks = rng.random((12, num_nodes)) < ratio
-    suite = default_suite(num_nodes, 4) + [
+    # every registered architecture (rival zoo included), not a hand-kept
+    # list -- a new registration is covered here with zero edits -- plus
+    # the InfiniteHBD configuration corners outside the registry
+    suite = [make_model(a, num_nodes) for a in arch_names()] + [
         InfiniteHBDModel(num_nodes, 4, k=3, closed_ring=False),
         InfiniteHBDModel(num_nodes, 4, k=1),
     ]
@@ -60,7 +64,7 @@ def test_evaluate_batch_extreme_masks():
     masks = np.stack([np.zeros(n, bool), np.ones(n, bool),
                       np.arange(n) < 62,           # only a tail sliver healthy
                       ~(np.arange(n) < 2)])        # only a head sliver healthy
-    for model in default_suite(n, 4):
+    for model in [make_model(a, n) for a in arch_names()]:
         grid = model.evaluate_batch(masks, [16, 32])
         for si in range(masks.shape[0]):
             faults = set(np.nonzero(masks[si])[0].tolist())

@@ -1,0 +1,129 @@
+#!/usr/bin/env python
+"""Benchmark-baseline gate: every gated section ships a committed baseline.
+
+Discovers the gated benchmark sections by scanning ``benchmarks/*.py`` for
+literal ``write_json("<section>", ...)`` calls (the marker that a section
+persists a machine-readable payload and participates in CI gating), then
+requires a committed, schema-valid ``BENCH_<section>.json`` at the repo
+root for each:
+
+  * the file exists and parses as JSON;
+  * the payload is a full-mode run (``"smoke": false``) -- CI smoke runs
+    write throwaway grids and must not be committed as baselines;
+  * the section's required keys are present (see ``REQUIRED_KEYS``), so a
+    half-written or hand-edited baseline fails loudly.
+
+A section added to ``benchmarks/`` with a ``write_json`` call and no
+committed baseline fails this gate -- that is the point.  Wired into the
+CI fast-tests job next to ``tools/check_docs.py``.  Run from anywhere::
+
+    python tools/check_bench.py
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+#: Minimum key set per section, sized to what each payload actually
+#: writes.  New sections need an entry here (the gate tells you so) --
+#: deliberate, so a baseline's schema is reviewed once, in this file.
+REQUIRED_KEYS = {
+    "sweep": {"smoke", "snapshots", "architectures", "numpy_s", "scalar_s",
+              "jax_s", "devices"},
+    "churn": {"smoke", "traces", "architectures", "num_nodes", "scalar_s",
+              "numpy_s", "bit_exact"},
+    "dcn": {"smoke", "num_nodes", "samples", "fault_ratios", "scalar_s",
+            "numpy_s", "bit_exact_vs_scalar_rows", "curve_orchestrated",
+            "near_zero_frontier"},
+    "cost": {"smoke", "samples", "fault_ratios", "architectures",
+             "table6_per_gpu_usd", "headline_ratios", "fig17d_musd_tp32",
+             "bit_exact_vs_scalar_rows"},
+    "matrix": {"smoke", "num_nodes", "architectures", "fault_ratios",
+               "backends", "bit_exact_backends", "rows"},
+}
+
+WRITE_JSON_RE = re.compile(r"""write_json\(\s*["']([A-Za-z0-9_]+)["']""")
+
+
+def gated_sections() -> dict:
+    """Map section name -> defining benchmark file, from literal
+    ``write_json("name", ...)`` calls.  (``roofline`` takes ``write_json``
+    as a bool flag and persists under ``results/`` -- no literal call, so
+    it is correctly not picked up.)"""
+    sections = {}
+    for path in sorted((ROOT / "benchmarks").glob("*.py")):
+        for m in WRITE_JSON_RE.finditer(path.read_text()):
+            sections[m.group(1)] = path.name
+    return sections
+
+
+def check_section(section: str, source: str) -> list:
+    problems = []
+    path = ROOT / f"BENCH_{section}.json"
+    if not path.exists():
+        problems.append(
+            f"{section}: benchmarks/{source} persists BENCH_{section}.json "
+            f"but no baseline is committed at the repo root -- run "
+            f"`PYTHONPATH=src python -m benchmarks.{section}` and commit it")
+        return problems
+    try:
+        payload = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        problems.append(f"{section}: {path.name} is not valid JSON ({e})")
+        return problems
+    if not isinstance(payload, dict) or not payload:
+        problems.append(f"{section}: {path.name} must be a non-empty object")
+        return problems
+    if payload.get("smoke") is not False:
+        problems.append(
+            f"{section}: {path.name} has smoke={payload.get('smoke')!r}; "
+            f"committed baselines must be full-mode runs (smoke: false)")
+    required = REQUIRED_KEYS.get(section)
+    if required is None:
+        problems.append(
+            f"{section}: new gated section -- add its required-key schema "
+            f"to REQUIRED_KEYS in tools/check_bench.py")
+    else:
+        missing = sorted(required - set(payload))
+        if missing:
+            problems.append(
+                f"{section}: {path.name} is missing required keys: "
+                f"{missing}")
+    return problems
+
+
+def main() -> int:
+    sections = gated_sections()
+    if not sections:
+        print("no gated sections found under benchmarks/ -- "
+              "is the checkout complete?")
+        return 1
+    problems = []
+    for section in sorted(sections):
+        problems.extend(check_section(section, sections[section]))
+    # Inverse direction: a committed baseline whose section no longer
+    # exists is stale and misleads readers about what CI verifies.
+    for path in sorted(ROOT.glob("BENCH_*.json")):
+        section = path.stem[len("BENCH_"):]
+        if section not in sections:
+            problems.append(
+                f"{section}: {path.name} is committed but no benchmarks/*.py "
+                f"writes it -- delete the stale baseline")
+    if problems:
+        print("benchmark baseline violations:")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    print(f"benchmark baselines OK ({len(sections)} gated sections, "
+          f"all with committed full-mode schema-valid baselines: "
+          f"{', '.join(sorted(sections))})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

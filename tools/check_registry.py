@@ -1,0 +1,129 @@
+#!/usr/bin/env python
+"""Registry-completeness gate: no architecture lands half-wired.
+
+Walks every :class:`repro.core.arch.ArchSpec` in the registry (builtins
+plus the ``repro.archs`` rival zoo) and fails if any architecture is
+missing a piece of the contract:
+
+  * a *scalar reference* -- the factory's model must override
+    ``evaluate()``;
+  * a *batched kernel* -- the model must override ``_batch_eval()``, and
+    a seeded probe grid must match the scalar path bit-for-bit;
+  * a *BOM entry or explicit unpriceable marker* -- exactly one of
+    ``ArchSpec.bom`` / ``ArchSpec.unpriceable`` (with matching BOM name);
+  * a *placement hook* the DCN engine implements (``placement_variant``
+    in ``repro.dcn.VARIANTS``, or ``None``);
+  * a *device kernel path* when JAX is installed
+    (``repro.sim.jax_backend.available_for``);
+  * a *test exercising it* -- some file under ``tests/`` must quote the
+    architecture name (``"railx"`` or ``'railx'``).
+
+Wired into the CI fast-tests job next to ``tools/check_docs.py``.  Run
+from anywhere::
+
+    python tools/check_registry.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+PROBE_NODES = 96
+PROBE_TPS = (8, 24, 32, 64)
+PROBE_SNAPSHOTS = 8
+PROBE_RATIO = 0.12
+
+
+def tested_names() -> set:
+    """Architecture names quoted anywhere under tests/."""
+    quoted = set()
+    for path in sorted((ROOT / "tests").glob("*.py")):
+        for m in re.finditer(r"""["']([A-Za-z0-9_.-]+)["']""",
+                             path.read_text()):
+            quoted.add(m.group(1))
+    return quoted
+
+
+def check_spec(spec, quoted: set) -> list:
+    from repro.core.hbd_models import HBDModel
+    from repro.dcn.engine import VARIANTS
+    problems = []
+
+    def bad(what: str) -> None:
+        problems.append((spec.name, what))
+
+    model = spec.factory(PROBE_NODES, 4)
+    if model.name != spec.name:
+        bad(f"factory builds a model named {model.name!r}")
+    if type(model).evaluate is HBDModel.evaluate:
+        bad("missing scalar reference: model does not override evaluate()")
+    if type(model)._batch_eval is HBDModel._batch_eval:
+        bad("missing batched kernel: model does not override _batch_eval()")
+    else:
+        rng = np.random.default_rng(0)
+        masks = rng.random((PROBE_SNAPSHOTS, PROBE_NODES)) < PROBE_RATIO
+        grid = model.evaluate_batch(masks, PROBE_TPS)
+        for si in range(PROBE_SNAPSHOTS):
+            faults = set(np.nonzero(masks[si])[0].tolist())
+            for ti, tp in enumerate(PROBE_TPS):
+                ref = model.evaluate(faults, tp)
+                got = grid.result(si, ti)
+                if (got.total_gpus, got.faulty_gpus, got.placed_gpus) != \
+                        (ref.total_gpus, ref.faulty_gpus, ref.placed_gpus):
+                    bad(f"batched kernel != scalar reference at "
+                        f"snapshot {si}, TP {tp}")
+                    break
+            else:
+                continue
+            break
+
+    if (spec.bom is None) == (spec.unpriceable is None):
+        bad("must set exactly one of bom= and unpriceable=")
+    elif spec.bom is not None and spec.bom.name != spec.name:
+        bad(f"BOM is named {spec.bom.name!r}")
+
+    if spec.placement_variant is not None \
+            and spec.placement_variant not in VARIANTS:
+        bad(f"placement_variant {spec.placement_variant!r} not implemented "
+            f"by repro.dcn (known: {VARIANTS})")
+
+    from repro.sim import jax_backend
+    if jax_backend.HAVE_JAX and not jax_backend.available_for([model]):
+        bad("no device kernel: neither a builtin jax_backend kernel nor "
+            "ArchSpec.jax_kernel")
+
+    if spec.name not in quoted:
+        bad("no test exercises it (no tests/*.py quotes the name)")
+    return problems
+
+
+def main() -> int:
+    from repro.core import arch
+    specs = arch.specs()
+    quoted = tested_names()
+    problems = []
+    for spec in specs:
+        problems.extend(check_spec(spec, quoted))
+    if problems:
+        print("registry contract violations:")
+        for name, what in problems:
+            print(f"  {name}: {what}")
+        print()
+        print(arch.registration_help())
+        return 1
+    priced = sum(1 for s in specs if s.bom is not None)
+    print(f"registry OK ({len(specs)} architectures checked: scalar+batched "
+          f"bit-exact, {priced} priced / {len(specs) - priced} explicitly "
+          f"unpriceable, all named in tests)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
