@@ -8,8 +8,57 @@ from __future__ import annotations
 
 import json
 import os
+import sys
 import time
-from typing import Callable
+from typing import Callable, Optional
+
+#: Known tcmalloc locations (the fleet-standard ``LD_PRELOAD`` for JAX CPU
+#: hosts; see the CI workflow, which preloads it when the distro ships it).
+TCMALLOC_PATHS = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4",
+)
+
+
+def pin_runtime(devices: Optional[int] = None) -> dict:
+    """Pin the process runtime knobs that move benchmark timings, and
+    return a description of what actually held.
+
+    Called before JAX initializes (``benchmarks.run`` does it first thing):
+    sets ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` when a
+    device count is requested -- ``devices=`` argument, else the
+    ``REPRO_BENCH_DEVICES`` environment variable -- and no count is pinned
+    already.  ``LD_PRELOAD`` (tcmalloc) cannot be applied from inside a
+    running process, so it is *reported*, not set: the CI workflow exports
+    it when the library exists.  The returned dict is embedded in every
+    gated payload (see :func:`write_json`) so a baseline records the
+    runtime it was measured under.
+    """
+    if devices is None:
+        env = os.environ.get("REPRO_BENCH_DEVICES", "").strip()
+        devices = int(env) if env else None
+    flags = os.environ.get("XLA_FLAGS", "")
+    if devices and "xla_force_host_platform_device_count" not in flags:
+        flags = (flags + " " if flags else "") \
+            + f"--xla_force_host_platform_device_count={devices}"
+        os.environ["XLA_FLAGS"] = flags
+    preload = os.environ.get("LD_PRELOAD", "")
+    runtime = {
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        "tcmalloc_preloaded": "tcmalloc" in preload,
+        "tcmalloc_available": next(
+            (p for p in TCMALLOC_PATHS if os.path.exists(p)), None),
+        "cpu_count": os.cpu_count(),
+        # a pin after jax backend init is a no-op; record it so a baseline
+        # measured that way is visibly suspect
+        "jax_preinitialized": "jax" in sys.modules,
+    }
+    _RUNTIME.clear()
+    _RUNTIME.update(runtime)
+    return runtime
+
+
+_RUNTIME: dict = {}
 
 
 def timed(fn: Callable, *args, **kwargs):
@@ -48,6 +97,9 @@ def write_json(section: str, payload: dict) -> str:
     (in ``BENCH_JSON_DIR`` when set, else the working directory)."""
     path = os.path.join(os.environ.get("BENCH_JSON_DIR", "."),
                         f"BENCH_{section}.json")
+    payload = dict(payload)
+    payload.setdefault("runtime", dict(_RUNTIME) if _RUNTIME
+                       else pin_runtime())
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     return path

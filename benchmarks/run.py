@@ -19,11 +19,13 @@ import sys
 import traceback
 
 SECTIONS = ("waste_ratio", "max_job", "fault_waiting", "sweep", "churn",
-            "dcn", "mfu_tables", "orchestration", "cost", "matrix",
+            "dcn", "mfu_tables", "orchestration", "cost", "matrix", "scale",
             "collectives_bench", "kernels_bench", "roofline")
 
 
 def main() -> None:
+    from .common import pin_runtime
+    pin_runtime()          # before any section imports/initializes jax
     parser = argparse.ArgumentParser(description="benchmark driver")
     parser.add_argument("--smoke", action="store_true")
     parser.add_argument("--backend", choices=("numpy", "jax", "both"),

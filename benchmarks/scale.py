@@ -1,0 +1,189 @@
+"""Streaming-scale Monte-Carlo: the million-snapshot bounded-memory claim.
+
+Full mode streams 1M counter-based fault snapshots of a 10k-node cluster
+through ``run_sweep``'s streamed engine -- the 10 GB host mask matrix is
+never materialized; chunks regenerate from counter-stream offsets and flow
+through donated device buffers on the JAX backend -- then:
+
+  * gates steady-state streaming throughput (snapshots/sec, best-of-N on a
+    fixed timed window so container CPU swings of ~2x perturb a margin
+    instead of deciding the gate) against per-backend floors ~4x under
+    measured;
+  * asserts the streamed grids bit-for-bit equal a batched pass over a
+    pre-materialized overlap window, AND that the full 1M run's first rows
+    equal that same reference (the streamed path at scale is pinned to the
+    unstreamed one);
+  * asserts bounded peak RSS (a ceiling far under the unstreamed matrix);
+  * runs the streamed churn-ensemble leg (``monte_carlo_replay``
+    ``engine="streamed"``) and asserts it equals the batched engine.
+
+Results persist as ``BENCH_scale.json``.  Standalone entry point::
+
+    python -m benchmarks.scale [--smoke] [--backend {numpy,jax,both}]
+                               [--snapshots N]
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.churn import ChurnSpec, monte_carlo_replay
+from repro.sim.engine import run_sweep
+from repro.sim.scenario import CounterIIDSnapshots, ScenarioSpec
+
+from .common import row, time_runs, write_json
+
+SNAPSHOTS = 1_000_000
+NODES = 10_000
+TIMED_SNAPSHOTS = 16_384      # best-of-N throughput window
+OVERLAP_SNAPSHOTS = 8_192     # streamed-vs-batched equality window
+RATIO = 0.07
+SEED = 5
+ARCHES = ("infinitehbd-k3", "nvl-72")
+#: snapshots/sec floors ~4x under measured steady state on the CI-class
+#: single-core host (numpy ~3.4k, jax ~2.2k) -- container timing swings of
+#: ~2x plus best-of-N leave real regressions, not noise, to trip these
+FLOORS = {"numpy": 800.0, "jax": 500.0}
+#: peak-RSS ceiling for the full streamed run; the unstreamed 1M x 10k
+#: mask matrix alone would be ~10 GB, so staying under this proves the
+#: stream never materialized it
+RSS_CEILING_MB = 4096.0
+
+
+def _peak_rss_mb() -> float:
+    try:
+        import resource
+        return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    except Exception:
+        return float("nan")
+
+
+def _spec(snapshots: int, nodes: int) -> ScenarioSpec:
+    return ScenarioSpec(num_nodes=nodes,
+                        snapshots=CounterIIDSnapshots(RATIO, snapshots, SEED),
+                        tp_sizes=(32,), architectures=ARCHES)
+
+
+def _grids_equal(a, b, rows=None) -> bool:
+    sl = slice(None) if rows is None else slice(0, rows)
+    return (np.array_equal(a.total_gpus, b.total_gpus)
+            and np.array_equal(a.faulty_gpus[:, sl], b.faulty_gpus[:, sl])
+            and np.array_equal(a.placed_gpus[:, sl], b.placed_gpus[:, sl]))
+
+
+def run(smoke: bool = False, backend: str = "both", snapshots: int = None):
+    total_snaps = snapshots or (4096 if smoke else SNAPSHOTS)
+    nodes = 2000 if smoke else NODES
+    chunk = 2048 if smoke else 8192
+
+    from repro.sim import jax_backend
+    spec = _spec(total_snaps, nodes)
+    jax_ok = jax_backend.available_for(spec.models())
+    if backend == "jax" and not jax_ok:
+        raise RuntimeError("--backend jax requested but jax is unavailable")
+    legs = (["numpy"] if backend in ("numpy", "both") else []) \
+        + (["jax"] if backend in ("jax", "both") and jax_ok else [])
+    payload = {"smoke": smoke, "snapshots": total_snaps, "num_nodes": nodes,
+               "architectures": list(ARCHES), "fault_ratio": RATIO,
+               "chunk_snapshots": chunk, "backends": legs,
+               "gate_floors_snaps_per_sec": FLOORS,
+               "devices": jax_backend.num_devices()}
+
+    # -- steady-state streaming throughput, best-of-N on a fixed window
+    timed_n = min(total_snaps, 2048 if smoke else TIMED_SNAPSHOTS)
+    wspec = _spec(timed_n, nodes)
+    for leg in legs:
+        run_sweep(wspec, backend=leg, chunk_snapshots=chunk)   # warm caches
+        best = time_runs(
+            lambda: run_sweep(wspec, backend=leg, chunk_snapshots=chunk),
+            reps=3)
+        sps = timed_n / best
+        payload[f"{leg}_snaps_per_sec"] = round(sps, 1)
+        row(f"scale_stream/{leg}/snaps{timed_n}/nodes{nodes}",
+            best / timed_n * 1e6, {"snaps_per_sec": round(sps, 1)})
+        if not smoke and sps < FLOORS[leg]:
+            raise AssertionError(
+                f"streamed sweep ({leg}) at {sps:.0f} snapshots/sec on "
+                f"{nodes} nodes; floor is {FLOORS[leg]:.0f} "
+                f"(best-of-3 on {timed_n} snapshots)")
+
+    # -- streamed == batched, bit for bit, on a materialized overlap window
+    overlap = min(total_snaps, 1024 if smoke else OVERLAP_SNAPSHOTS)
+    ospec = _spec(overlap, nodes)
+    ref = run_sweep(ospec, masks=ospec.snapshots.masks(nodes),
+                    backend="numpy")
+    for leg in legs:
+        got = run_sweep(ospec, backend=leg, chunk_snapshots=999)  # off-grid
+        assert _grids_equal(got, ref), \
+            f"streamed {leg} grids != batched grids on {overlap} snapshots"
+    payload.update(overlap_snapshots=overlap, stream_equal=True)
+
+    # -- the headline: the full run, streamed, in bounded memory; its first
+    # rows must equal the batched overlap reference
+    t0 = time.perf_counter()
+    res = run_sweep(spec, backend=legs[0], chunk_snapshots=chunk)
+    full_s = time.perf_counter() - t0
+    assert _grids_equal(res, ref, rows=overlap), \
+        "full streamed run's head rows != batched reference"
+    waste = float(res.waste_ratio[0, :, 0].mean())
+    peak_mb = _peak_rss_mb()
+    payload.update(full_backend=legs[0], full_s=round(full_s, 2),
+                   full_snaps_per_sec=round(total_snaps / full_s, 1),
+                   peak_rss_mb=round(peak_mb, 1),
+                   mean_waste_infinitehbd_tp32=round(waste, 6))
+    row(f"scale_full/{legs[0]}/snaps{total_snaps}/nodes{nodes}",
+        full_s / total_snaps * 1e6,
+        {"snaps_per_sec": round(total_snaps / full_s, 1),
+         "peak_rss_mb": round(peak_mb, 1), "mean_waste": round(waste, 4)})
+    if not smoke and np.isfinite(peak_mb) and peak_mb > RSS_CEILING_MB:
+        raise AssertionError(
+            f"peak RSS {peak_mb:.0f} MB exceeds the {RSS_CEILING_MB:.0f} MB "
+            f"streaming ceiling (unstreamed masks would be "
+            f"~{total_snaps * nodes / 1e6:.0f} MB)")
+
+    # -- streamed churn ensemble: bit-equal to batched, throughput reported
+    cspec = ChurnSpec(trace_nodes=60 if smoke else 200,
+                      horizon_h=(30 if smoke else 60) * 24.0,
+                      tp_sizes=(32,), architectures=ARCHES, seed=1)
+    n_traces = 4 if smoke else 64
+    realizations = [cspec.trace(r) for r in range(n_traces)]
+    cref = monte_carlo_replay(cspec, realizations, engine="batched",
+                              backend="numpy")
+    t0 = time.perf_counter()
+    cgot = monte_carlo_replay(cspec, realizations, engine="streamed",
+                              backend="numpy", chunk_snapshots=chunk)
+    churn_s = time.perf_counter() - t0
+    for tg, tr in zip(cgot.timelines, cref.timelines):
+        assert (np.array_equal(tg.placed_gpus, tr.placed_gpus)
+                and np.array_equal(tg.faulty_gpus, tr.faulty_gpus)), \
+            "streamed churn grids != batched"
+    payload.update(churn_traces=n_traces, churn_stream_equal=True,
+                   churn_stream_s=round(churn_s, 3))
+    row(f"scale_churn_stream/numpy/traces{n_traces}",
+        churn_s / n_traces * 1e6,
+        {"traces_per_sec": round(n_traces / churn_s, 2), "bit_exact": True})
+
+    write_json("scale", payload)
+
+
+def main():
+    import argparse
+    from .common import pin_runtime
+    pin_runtime()
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--smoke", action="store_true",
+                   help="CI-sized stream (no gates)")
+    p.add_argument("--backend", choices=("numpy", "jax", "both"),
+                   default="both")
+    p.add_argument("--snapshots", type=int, default=None,
+                   help=f"stream length (default: 4096 smoke / {SNAPSHOTS} "
+                        f"full)")
+    args = p.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, backend=args.backend, snapshots=args.snapshots)
+
+
+if __name__ == "__main__":
+    main()

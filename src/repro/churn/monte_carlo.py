@@ -8,7 +8,10 @@ the scenario engine's snapshot axis and evaluates the whole ensemble in
 one ``evaluate_masks`` call -- on the JAX backend that means thousands of
 348-day traces stream through the device-sharded `vmap`/`jit` grid in
 seconds, bit-for-bit equal to the scalar event-by-event replay
-(``benchmarks/churn.py`` gates the >= 10x throughput claim).
+(``benchmarks/churn.py`` gates the >= 10x throughput claim).  For
+ensembles too large to concatenate, ``engine="streamed"`` re-chunks the
+realizations through ``evaluate_mask_stream`` in bounded memory with the
+same bit-for-bit grids (``tests/test_stream.py``).
 """
 
 from __future__ import annotations
@@ -19,7 +22,7 @@ from typing import Dict, List, Sequence, Tuple, Union
 import numpy as np
 
 from ..core.trace import FaultTrace, generate_trace, to_4gpu_trace
-from ..sim.engine import evaluate_masks
+from ..sim.engine import evaluate_mask_stream, evaluate_masks
 from ..sim.scenario import DEFAULT_ARCHITECTURES, make_model
 from .replay import replay_trace
 from .timeline import ChurnTimeline
@@ -113,7 +116,11 @@ def monte_carlo_replay(spec: ChurnSpec,
     pre-generated sequence of :class:`FaultTrace` (the benchmarks pass one
     so engine timing excludes trace generation).  ``engine="batched"``
     evaluates ALL realizations' interval masks in a single scenario-engine
-    pass; ``engine="scalar"`` loops the event-by-event reference replay.
+    pass; ``engine="streamed"`` produces bit-identical timelines but feeds
+    the masks through ``evaluate_mask_stream`` one realization at a time
+    (re-chunked across realization boundaries), bounding peak memory at
+    ~one evaluation block for arbitrarily large ensembles;
+    ``engine="scalar"`` loops the event-by-event reference replay.
     """
     if isinstance(traces, int):
         realizations = [spec.trace(r) for r in range(traces)]
@@ -126,21 +133,29 @@ def monte_carlo_replay(spec: ChurnSpec,
                             gpus_per_node=spec.gpus_per_node, engine="scalar")
                for tr in realizations]
         return ChurnEnsemble(spec, tls, "scalar")
-    if engine != "batched":
-        raise ValueError(f"unknown engine {engine!r} (batched|scalar)")
+    if engine not in ("batched", "streamed"):
+        raise ValueError(f"unknown engine {engine!r} (batched|streamed|scalar)")
 
     models = spec.models()
     names = [m.name for m in models]
     tps = np.asarray(spec.tp_sizes, dtype=np.int64)
     edges_list = [tr.interval_edges() for tr in realizations]
-    if realizations:
-        masks = np.concatenate([tr.fault_masks(e) for tr, e
-                                in zip(realizations, edges_list)])
+    if engine == "streamed":
+        chunks = (tr.fault_masks(e)
+                  for tr, e in zip(realizations, edges_list))
+        total, faulty, placed, chosen = evaluate_mask_stream(
+            models, spec.tp_sizes, chunks,
+            int(sum(len(e) for e in edges_list)),
+            chunk_snapshots=chunk_snapshots, backend=backend)
     else:
-        masks = np.zeros((0, spec.num_nodes), dtype=bool)
-    total, faulty, placed, chosen = evaluate_masks(
-        models, spec.tp_sizes, masks, chunk_snapshots=chunk_snapshots,
-        backend=backend)
+        if realizations:
+            masks = np.concatenate([tr.fault_masks(e) for tr, e
+                                    in zip(realizations, edges_list)])
+        else:
+            masks = np.zeros((0, spec.num_nodes), dtype=bool)
+        total, faulty, placed, chosen = evaluate_masks(
+            models, spec.tp_sizes, masks, chunk_snapshots=chunk_snapshots,
+            backend=backend)
 
     tls = []
     lo = 0

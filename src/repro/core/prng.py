@@ -38,6 +38,33 @@ def _rotl32(x: np.ndarray, d: int) -> np.ndarray:
     return ((x << d) | (x >> _U32(32 - int(d)))) & _MASK32
 
 
+def _threefry2x32_inplace(k0: np.ndarray, k1: np.ndarray,
+                          x0: np.ndarray, x1: np.ndarray,
+                          tmp: np.ndarray) -> None:
+    """Threefry-2x32 with broadcast uint32 keys, updating ``x0``/``x1``
+    in place (``tmp`` is a scratch buffer of the lane shape).
+
+    Same 20-round schedule as :func:`threefry2x32`; uint32 wraparound is
+    exact by construction so no ``errstate`` guard is needed.  The in-place
+    formulation exists for :func:`counter_fault_masks`' batched row blocks,
+    where per-op temporaries would otherwise dominate the runtime.
+    """
+    ks = (k0, k1, k0 ^ k1 ^ _U32(0x1BD11BDA))
+    np.add(x0, ks[0], out=x0)
+    np.add(x1, ks[1], out=x1)
+    for gi, (a, b, ctr) in enumerate(_INJECT):
+        for r in _ROTATIONS[gi % 2]:
+            np.add(x0, x1, out=x0)
+            # tmp = rotl(x1, r); x1 = x0 ^ tmp
+            np.left_shift(x1, _U32(r), out=tmp)
+            np.right_shift(x1, _U32(32 - r), out=x1)
+            np.bitwise_or(tmp, x1, out=tmp)
+            np.bitwise_xor(x0, tmp, out=x1)
+        np.add(x0, ks[a], out=x0)
+        np.add(x1, ks[b], out=x1)
+        np.add(x1, _U32(ctr), out=x1)
+
+
 def threefry2x32(k0: int, k1: int, c0: np.ndarray,
                  c1: np.ndarray) -> tuple:
     """The raw Threefry-2x32 block cipher on uint32 lanes (20 rounds)."""
@@ -96,21 +123,51 @@ def threefry_bits(key: np.ndarray, size: int,
     return threefry_hash(key, np.arange(size, dtype=_U32))
 
 
+def threefry_fold_in_batch(key: np.ndarray, data: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`threefry_fold_in`: one ``(len(data), 2)`` uint32 key
+    matrix, row ``i`` bit-identical to ``threefry_fold_in(key, data[i])``.
+
+    ``fold_in`` hashes the 2-word seed block of each datum, so every row is
+    one independent threefry block -- a single broadcast cipher call over
+    the whole index vector instead of a Python-level loop.
+    """
+    data = np.asarray(data, dtype=np.int64)
+    hi = ((data >> 32) & 0xFFFFFFFF).astype(_U32)
+    lo = (data & 0xFFFFFFFF).astype(_U32)
+    x0, x1 = threefry2x32(key[0], key[1], hi, lo)
+    return np.stack([x0, x1], axis=-1)
+
+
 def ratio_threshold(ratio: float) -> int:
     """Integer threshold for ``bits < threshold`` Bernoulli(ratio) draws."""
     return min(1 << 32, max(0, int(round(float(ratio) * (1 << 32)))))
 
 
+#: Row-block budget of the batched mask generator: lanes are processed in
+#: blocks of at most ``2**22`` counters so the uint32 working set stays at
+#: a few tens of MB regardless of the requested snapshot count.
+_MASK_BLOCK_LANES = 1 << 22
+
+
 def counter_fault_masks(num_nodes: int, node_fault_ratio: float,
                         samples: int, seed: int = 0,
-                        partitionable: bool = False) -> np.ndarray:
+                        partitionable: bool = False,
+                        start: int = 0) -> np.ndarray:
     """I.i.d. fault masks from the threefry counter stream.
 
-    Row ``i`` depends only on ``(seed, i)`` -- key ``fold_in(seed_key, i)``
-    hashed over a per-node counter -- so the matrix is invariant under
-    chunking and device sharding, and the JAX backend regenerates identical
-    rows on-device via ``jax.random`` without ever materializing the host
-    matrix (see ``repro.sim.jax_backend.counter_masks_device``).
+    Row ``i`` depends only on ``(seed, start + i)`` -- key
+    ``fold_in(seed_key, start + i)`` hashed over a per-node counter -- so
+    the matrix is invariant under chunking and device sharding, and both
+    the JAX backend (on device, via ``jax.random``) and the streaming
+    engine (host, per chunk via ``start``) regenerate identical rows
+    without ever materializing the full matrix (see
+    ``repro.sim.jax_backend.counter_masks_device``).
+
+    The whole batch is generated as vectorized broadcast cipher calls over
+    bounded row blocks (keys from :func:`threefry_fold_in_batch`, lanes via
+    the in-place threefry), bit-identical to the per-row
+    ``threefry_bits(threefry_fold_in(root, i), ...)`` reference that
+    ``tests/test_jax_backend.py`` pins against ``jax.random``.
 
     The canonical stream is pinned to the *original* threefry bit layout
     (``partitionable=False``) regardless of the environment, so a seeded
@@ -128,14 +185,40 @@ def counter_fault_masks(num_nodes: int, node_fault_ratio: float,
     root = threefry_seed(seed)
     out = np.empty((samples, num_nodes), dtype=bool)
     t32 = _U32(thresh)
-    for i in range(samples):
-        bits = threefry_bits(threefry_fold_in(root, i), num_nodes,
-                             partitionable)
-        out[i] = bits < t32
+    rows_per_block = max(1, _MASK_BLOCK_LANES // max(num_nodes, 1))
+    # per-row counter layout: the original stream splits the padded flat
+    # iota [0..n-1, (0)] in half; the partitionable stream runs two
+    # parallel lanes (hi=0, lo=iota) XORed
+    if partitionable:
+        half = num_nodes
+        c0_row = np.zeros(num_nodes, _U32)
+        c1_row = np.arange(num_nodes, dtype=_U32)
+    else:
+        half = (num_nodes + 1) // 2
+        flat = np.arange(2 * half, dtype=_U32)
+        flat[num_nodes:] = 0                   # odd width pads one zero
+        c0_row, c1_row = flat[:half], flat[half:]
+    for lo_r in range(0, samples, rows_per_block):
+        hi_r = min(lo_r + rows_per_block, samples)
+        rows = hi_r - lo_r
+        keys = threefry_fold_in_batch(
+            root, np.arange(start + lo_r, start + hi_r, dtype=np.int64))
+        x0 = np.broadcast_to(c0_row, (rows, half)).copy()
+        x1 = np.broadcast_to(c1_row, (rows, half)).copy()
+        tmp = np.empty_like(x0)
+        _threefry2x32_inplace(keys[:, :1], keys[:, 1:], x0, x1, tmp)
+        if partitionable:
+            np.bitwise_xor(x0, x1, out=x0)
+            np.less(x0, t32, out=out[lo_r:hi_r])
+        else:
+            np.less(x0, t32, out=out[lo_r:hi_r, :half])
+            np.less(x1[:, :num_nodes - half], t32,
+                    out=out[lo_r:hi_r, half:])
     return out
 
 
 __all__ = [
     "threefry2x32", "threefry_hash", "threefry_seed", "threefry_fold_in",
-    "threefry_bits", "ratio_threshold", "counter_fault_masks",
+    "threefry_fold_in_batch", "threefry_bits", "ratio_threshold",
+    "counter_fault_masks",
 ]

@@ -1,4 +1,4 @@
-"""Shared grid reductions for fault-sweep results.
+"""Shared grid and segment reductions for fault-sweep results.
 
 One implementation of the mean/percentile/threshold reductions that both
 ``repro.sim.tables`` (SweepResult grids) and the ``*_batched`` wrappers in
@@ -6,6 +6,12 @@ One implementation of the mean/percentile/threshold reductions that both
 both modules and pinned bit-for-bit to the scalar paths by
 ``tests/test_sim_engine.py``.  Keep the float conversions exactly as they
 are: reordering them changes low bits and breaks the pinning.
+
+Also home to the sparse *segment* reductions of the batched DCN placement
+hot path (:func:`run_segments`, :func:`segment_carve_counts`): the K-hop
+component decomposition of a fault-mask batch expressed over the nonzero
+stream alone, shared by ``repro.dcn.kernel``'s carve counting and member
+compaction so the two can never drift apart.
 """
 
 from __future__ import annotations
@@ -37,4 +43,44 @@ def waiting_share(placed: np.ndarray, job_gpus: int) -> float:
     return float((placed < job_gpus).sum() / len(placed))
 
 
-__all__ = ["waste_stats", "percentile_capacity", "waiting_share"]
+# ------------------------------------------------------ segment reductions
+
+def run_segments(avail: np.ndarray, max_gap: int
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Run decomposition of a ``(rows, cols)`` bool matrix's nonzero stream.
+
+    Returns ``(rows32, cols32, starts, seg_len)``: the row-major nonzero
+    coordinates (int32), the stream offset where each maximal run starts,
+    and each run's length.  A run breaks at a row change or at a column
+    gap of ``>= max_gap`` missing positions -- exactly Algorithm 2's K-hop
+    component rule, O(nonzeros) past one ``np.nonzero``.
+    """
+    avail = np.asarray(avail, dtype=bool)
+    rows, cols = np.nonzero(avail)        # row-major; cols ascend per row
+    if not rows.size:
+        e32 = np.zeros(0, dtype=np.int32)
+        return e32, e32, e32, np.zeros(0, dtype=np.int32)
+    rows32 = rows.astype(np.int32)
+    cols32 = cols.astype(np.int32)
+    new_seg = np.ones(rows.size, dtype=bool)
+    new_seg[1:] = ((rows32[1:] != rows32[:-1])
+                   | (cols32[1:] - cols32[:-1] - 1 >= max_gap))
+    starts = np.flatnonzero(new_seg).astype(np.int32)
+    seg_len = np.diff(np.append(starts, np.int32(rows.size)))
+    return rows32, cols32, starts, seg_len
+
+
+def segment_carve_counts(avail: np.ndarray, max_gap: int, m: int,
+                         rows: int) -> np.ndarray:
+    """Per-row carved-node counts: each run places ``len // m * m`` nodes
+    (complete groups of ``m`` inside the component), summed per row into an
+    int64 vector of length ``rows``."""
+    rows32, _, starts, seg_len = run_segments(avail, max_gap)
+    if not rows32.size:
+        return np.zeros(rows, dtype=np.int64)
+    return np.bincount(rows32[starts], weights=(seg_len // m) * m,
+                       minlength=rows).astype(np.int64)
+
+
+__all__ = ["waste_stats", "percentile_capacity", "waiting_share",
+           "run_segments", "segment_carve_counts"]

@@ -35,6 +35,8 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core.orchestrator import deployment_strategy
+from ..core.reductions import run_segments, segment_carve_counts
+from ..kernels.prefix_scan.host import mask_cumsum
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,9 +109,6 @@ class BatchedPlacement:
 
 # --------------------------------------------------------------- line carve
 
-_TRI_CACHE: Dict[int, np.ndarray] = {}
-
-
 def _idiv(a: np.ndarray, q: int) -> np.ndarray:
     """Elementwise floor division, as a shift when ``q`` is a power of two
     (an arithmetic right shift floors negatives too, so the ``-1`` pad is
@@ -127,23 +126,6 @@ def _imod(a: np.ndarray, q: int) -> np.ndarray:
     return a % q
 
 
-def _cumsum_last(mask: np.ndarray) -> np.ndarray:
-    """Inclusive int32 cumsum of a bool array along its last axis.
-
-    NumPy's ``cumsum`` is a scalar loop; for the short carve axes of the
-    chunk grid a float32 GEMM against a lower-triangular ones matrix is an
-    order of magnitude faster (counts <= length, exact in float32).
-    """
-    length = mask.shape[-1]
-    if length > 128:
-        return np.cumsum(mask, axis=-1, dtype=np.int32)
-    tri = _TRI_CACHE.get(length)
-    if tri is None:
-        tri = np.tril(np.ones((length, length), dtype=np.float32)).T
-        _TRI_CACHE[length] = tri
-    return (mask.astype(np.float32) @ tri).astype(np.int32)
-
-
 def line_carve(faulty: np.ndarray, k: int, m: int) -> np.ndarray:
     """Placed-node mask of Algorithm 2 along the last axis.
 
@@ -158,12 +140,12 @@ def line_carve(faulty: np.ndarray, k: int, m: int) -> np.ndarray:
     if length == 0:
         return np.zeros(f.shape, dtype=bool)
     zeros = np.zeros(f.shape[:-1] + (1,), dtype=np.int32)
-    hc0 = np.concatenate([zeros, _cumsum_last(healthy)], axis=-1)
+    hc0 = np.concatenate([zeros, mask_cumsum(healthy)], axis=-1)
     before = hc0[..., :length]            # healthy strictly before i
     total = hc0[..., length:]             # (..., 1) healthy on the line
     runk = np.zeros(f.shape, dtype=bool)
     if length >= k:
-        fc0 = np.concatenate([zeros, _cumsum_last(f)], axis=-1)
+        fc0 = np.concatenate([zeros, mask_cumsum(f)], axis=-1)
         runk[..., k - 1:] = (fc0[..., k:] - fc0[..., :length - k + 1]) == k
     comp_start = np.maximum.accumulate(np.where(runk, before, 0), axis=-1)
     # reverse cummin on a contiguous copy (accumulate on a flipped view
@@ -183,19 +165,12 @@ def segment_placed_counts(available: np.ndarray, k: int, m: int) -> np.ndarray:
     component places ``size // m * m`` nodes -- computable from the
     available-position stream alone (O(available) past one ``nonzero``),
     which beats the dense scans whenever the caller loops (the binary
-    search's residual counts, where most nodes are tier-consumed).
+    search's residual counts, where most nodes are tier-consumed).  Thin
+    wrapper over the shared
+    :func:`repro.core.reductions.segment_carve_counts`.
     """
     avail = np.asarray(available, dtype=bool)
-    snaps = avail.shape[0]
-    rows, cols = np.nonzero(avail)        # row-major; cols ascend per row
-    if not rows.size:
-        return np.zeros(snaps, dtype=np.int64)
-    new_seg = np.ones(rows.size, dtype=bool)
-    new_seg[1:] = (rows[1:] != rows[:-1]) | (cols[1:] - cols[:-1] - 1 >= k)
-    starts = np.flatnonzero(new_seg)
-    seg_len = np.diff(np.append(starts, rows.size))
-    return np.bincount(rows[starts], weights=(seg_len // m) * m,
-                       minlength=snaps).astype(np.int64)
+    return segment_carve_counts(avail, k, m, avail.shape[0])
 
 
 def stream_placed_cols(available: np.ndarray, k: int, m: int
@@ -211,19 +186,12 @@ def stream_placed_cols(available: np.ndarray, k: int, m: int
     """
     avail = np.asarray(available, dtype=bool)
     snaps = avail.shape[0]
-    rows, cols = np.nonzero(avail)        # row-major; cols ascend per row
-    if not rows.size:
+    rows32, cols32, starts, seg_len = run_segments(avail, k)
+    if not rows32.size:
         zeros = np.zeros(snaps, dtype=np.int64)
         return np.zeros(0, dtype=np.int32), zeros, zeros
-    rows32 = rows.astype(np.int32)
-    cols32 = cols.astype(np.int32)
-    new_seg = np.ones(rows.size, dtype=bool)
-    new_seg[1:] = ((rows32[1:] != rows32[:-1])
-                   | (cols32[1:] - cols32[:-1] - 1 >= k))
-    seg_id = np.cumsum(new_seg, dtype=np.int32) - 1
-    starts = np.flatnonzero(new_seg).astype(np.int32)
-    seg_len = np.diff(np.append(starts, np.int32(rows.size)))
-    idx = np.arange(rows.size, dtype=np.int32) - starts[seg_id]
+    seg_id = np.repeat(np.arange(len(starts), dtype=np.int32), seg_len)
+    idx = np.arange(rows32.size, dtype=np.int32) - starts[seg_id]
     seg_groups = seg_len // m
     placed = idx < (seg_groups * m)[seg_id]
     counts = np.bincount(rows32[starts], weights=seg_groups,
@@ -239,7 +207,7 @@ def _group_slots(placed: np.ndarray, m: int) -> Tuple[np.ndarray, np.ndarray]:
     exclusive placed-count prefix divmod ``m`` recovers Algorithm 2's
     sequential carving.
     """
-    pc = _cumsum_last(placed) - placed
+    pc = mask_cumsum(placed) - placed
     return _idiv(pc, m), _imod(pc, m)
 
 

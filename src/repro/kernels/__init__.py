@@ -3,6 +3,9 @@
   * flash_attention -- blockwise online-softmax attention (train/prefill)
   * decode_attention -- flash-decode against long KV caches
   * ssd_scan -- Mamba-2 chunked state-space-dual scan
+  * prefix_scan -- blocked mask cumsum (plus a NumPy-only ``host`` path
+    used by the DCN placement kernels -- that package must stay importable
+    without JAX)
 Each package ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit
 wrapper) and ref.py (pure-jnp oracle).
 """

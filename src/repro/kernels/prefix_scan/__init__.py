@@ -1,0 +1,8 @@
+"""Blocked inclusive prefix scan (mask cumsum) kernel package.
+
+``host.py`` is the NumPy-only blocked-GEMM path imported by
+``repro.dcn.kernel`` (keep this package importable without JAX -- ops/ref/
+pallas modules import jax lazily at *their* import, not here);
+``prefix_scan.py`` is the Pallas TPU kernel, ``ops.py`` the jitted entry
+point, ``ref.py`` the sequential oracle.
+"""

@@ -1,0 +1,73 @@
+"""Jitted public entry point for the prefix-scan kernel.
+
+``prefix_scan`` is the device-side twin of ``host.mask_cumsum``: inclusive
+int32 prefix sums along the last axis, exact on mask/count input.  On TPU
+it dispatches to the Pallas kernel; elsewhere it lowers to the fused
+blocked-GEMM formulation, which XLA compiles to dense matmuls instead of
+the serialized scan loop ``jnp.cumsum`` becomes on CPU.  All
+implementations are bit-for-bit equal to ``ref.prefix_scan_ref``
+(``tests/test_prefix_scan.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .prefix_scan import prefix_scan_pallas
+from .ref import prefix_scan_ref
+
+#: float32 partial counts are exact through ``2**24``; longer axes fall
+#: back to the reference scan (no production grid comes close).
+_F32_EXACT = 1 << 24
+
+
+def blocked_cumsum(x, block: int = 128):
+    """Fused XLA formulation of the blocked prefix sum (any leading axes).
+
+    Within-block inclusive sums are one ``(block, block)`` triangular
+    matmul; the across-block carry is a ``jnp.cumsum`` over an axis
+    ``block``-times shorter, so the serialized-scan cost shrinks by the
+    block factor while the bulk of the work lands on the matmul unit.
+    """
+    length = x.shape[-1]
+    if length == 0:
+        return jnp.zeros(x.shape, jnp.int32)
+    if length >= _F32_EXACT:
+        return prefix_scan_ref(x)
+    n_blocks = -(-length // block)
+    xf = x.astype(jnp.float32)
+    if n_blocks == 1:
+        tri = jnp.tril(jnp.ones((length, length), jnp.float32)).T
+        return (xf @ tri).astype(jnp.int32)
+    pad = n_blocks * block - length
+    if pad:
+        xf = jnp.concatenate(
+            [xf, jnp.zeros(xf.shape[:-1] + (pad,), jnp.float32)], axis=-1)
+    blocks = xf.reshape(xf.shape[:-1] + (n_blocks, block))
+    tri = jnp.tril(jnp.ones((block, block), jnp.float32)).T
+    within = blocks @ tri
+    totals = within[..., -1]
+    carry = jnp.cumsum(totals, axis=-1) - totals
+    out = (within + carry[..., None]).astype(jnp.int32)
+    return out.reshape(xf.shape)[..., :length]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "impl"))
+def prefix_scan(x, *, block: int = 128, impl: str = "auto"):
+    """Inclusive int32 prefix sum along the last axis (2-D input).
+
+    ``impl``: ``"ref"`` (jnp.cumsum oracle), ``"pallas"`` (TPU kernel,
+    interpret mode elsewhere), ``"blocked"`` (fused XLA GEMM form), or
+    ``"auto"`` -- pallas on TPU, blocked otherwise.
+    """
+    if impl == "ref":
+        return prefix_scan_ref(x)
+    if impl == "pallas" or (impl == "auto"
+                            and jax.default_backend() == "tpu"):
+        return prefix_scan_pallas(x, block=block)
+    if impl in ("auto", "blocked"):
+        return blocked_cumsum(x, block=block)
+    raise ValueError(f"unknown impl {impl!r} (auto|ref|pallas|blocked)")

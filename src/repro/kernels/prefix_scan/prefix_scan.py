@@ -1,0 +1,71 @@
+"""Pallas TPU kernel for the blocked inclusive prefix scan.
+
+The grid walks ``(row blocks, column blocks)`` with columns innermost and
+sequential; the running carry (one partial count per row) lives in VMEM
+scratch across column steps.  Per tile the kernel does one MXU matmul of
+the ``(R, B)`` tile against the upper-triangular ones matrix -- the
+within-tile inclusive prefix sums -- then adds the carry and stores the
+tile's final column back into scratch.  Counts are exact in float32 (every
+partial sum is an integer ``<= length``), mirroring the host blocked-GEMM
+path in ``host.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, y_ref, carry_scr, *, block: int):
+    cj = pl.program_id(1)
+
+    @pl.when(cj == 0)
+    def _init():
+        carry_scr[...] = jnp.zeros_like(carry_scr)
+
+    x = x_ref[...].astype(jnp.float32)                       # (R, B)
+    tri = (lax.broadcasted_iota(jnp.int32, (block, block), 0)
+           <= lax.broadcasted_iota(jnp.int32, (block, block), 1)
+           ).astype(jnp.float32)
+    within = lax.dot(x, tri, preferred_element_type=jnp.float32)
+    y = within + carry_scr[...]                              # carry: (R, 1)
+    y_ref[...] = y.astype(jnp.int32)
+    carry_scr[...] = y[:, block - 1:block]
+
+
+def prefix_scan_pallas(x, *, block: int = 128, row_block: int = 8,
+                       interpret=None):
+    """Inclusive int32 prefix sum along the last axis of a 2-D mask/count
+    array.  Rows and columns are zero-padded to the tile grid and the
+    result sliced back, so any shape is accepted."""
+    if x.ndim != 2:
+        raise ValueError(f"prefix_scan_pallas expects 2-D input, got {x.shape}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    rows, length = x.shape
+    block = min(block, max(length, 1))
+    row_block = min(row_block, max(rows, 1))
+    if rows == 0 or length == 0:
+        return jnp.zeros((rows, length), jnp.int32)
+    n_rb = -(-rows // row_block)
+    n_cb = -(-length // block)
+    xi = x.astype(jnp.int32)
+    xi = jnp.pad(xi, ((0, n_rb * row_block - rows),
+                      (0, n_cb * block - length)))
+    kernel = functools.partial(_scan_kernel, block=block)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_rb, n_cb),
+        in_specs=[pl.BlockSpec((row_block, block), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((row_block, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_rb * row_block, n_cb * block),
+                                       jnp.int32),
+        scratch_shapes=[pltpu.VMEM((row_block, 1), jnp.float32)],
+        interpret=interpret,
+    )(xi)
+    return out[:rows, :length]

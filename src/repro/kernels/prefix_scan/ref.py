@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the prefix-scan kernel: the literal inclusive
+cumulative sum along the last axis, in int32."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def prefix_scan_ref(x):
+    """Inclusive int32 prefix sum along the last axis of a mask/count
+    array -- the sequential semantics every other implementation (host
+    blocked GEMM, fused XLA formulation, Pallas kernel) must match
+    bit-for-bit."""
+    return jnp.cumsum(x.astype(jnp.int32), axis=-1, dtype=jnp.int32)

@@ -29,11 +29,12 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import List, Optional, Sequence, Tuple
+from typing import Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.hbd_models import HBDModel
+from ..core.prng import counter_fault_masks
 from .scenario import CounterIIDSnapshots, ScenarioSpec
 
 BACKENDS = ("numpy", "jax")
@@ -153,6 +154,65 @@ def evaluate_masks(models: Sequence[HBDModel], tp_sizes: Sequence[int],
     return total, faulty, placed, "numpy"
 
 
+def evaluate_mask_stream(models: Sequence[HBDModel], tp_sizes: Sequence[int],
+                         chunks: Iterable[np.ndarray], total_snapshots: int,
+                         *, chunk_snapshots: int = 1024,
+                         backend: str = "auto"
+                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, str]:
+    """Evaluate a *stream* of mask chunks in bounded memory.
+
+    ``chunks`` is any iterable of ``(rows_i, nodes)`` bool matrices whose
+    rows concatenate to ``total_snapshots`` snapshots.  Incoming chunks are
+    re-chunked into ~``chunk_snapshots`` evaluation blocks (chunk
+    boundaries in the source need not align with evaluation boundaries), so
+    the grids are bit-for-bit equal to one :func:`evaluate_masks` call on
+    the full concatenation while peak mask memory stays at about one block
+    plus the largest single source chunk -- a million-snapshot x 10k-node
+    stream never exists as a 10 GB host matrix.  On the JAX backend each
+    block flows through the same jit-cached, donated device buffers as the
+    batched path (``repro.sim.jax_backend.GridEvaluator``).
+    """
+    chosen = resolve_backend(backend, models)
+    tp_sizes = list(tp_sizes)
+    a_count, t_count = len(models), len(tp_sizes)
+    total = np.zeros((a_count, t_count), dtype=np.int64)
+    faulty = np.zeros((a_count, total_snapshots, t_count), dtype=np.int64)
+    placed = np.zeros((a_count, total_snapshots, t_count), dtype=np.int64)
+    chunk_snapshots = max(1, chunk_snapshots)
+    state = {"lo": 0}
+    pending: List[np.ndarray] = []
+    pending_rows = 0
+
+    def flush() -> None:
+        if not pending:
+            return
+        block = pending[0] if len(pending) == 1 else np.concatenate(pending)
+        del pending[:]
+        lo = state["lo"]
+        t, f, p, _ = evaluate_masks(models, tp_sizes, block,
+                                    chunk_snapshots=chunk_snapshots,
+                                    backend=chosen)
+        total[:] = t
+        faulty[:, lo:lo + block.shape[0]] = f
+        placed[:, lo:lo + block.shape[0]] = p
+        state["lo"] = lo + block.shape[0]
+
+    for chunk in chunks:
+        chunk = np.asarray(chunk, dtype=bool)
+        if not chunk.shape[0]:
+            continue
+        pending.append(chunk)
+        pending_rows += chunk.shape[0]
+        if pending_rows >= chunk_snapshots:
+            flush()
+            pending_rows = 0
+    flush()
+    if state["lo"] != total_snapshots:
+        raise ValueError(f"mask stream yielded {state['lo']} snapshots, "
+                         f"expected {total_snapshots}")
+    return total, faulty, placed, chosen
+
+
 def run_sweep(spec: ScenarioSpec, *, masks: Optional[np.ndarray] = None,
               models: Optional[Sequence[HBDModel]] = None,
               chunk_snapshots: int = 1024,
@@ -186,6 +246,22 @@ def run_sweep(spec: ScenarioSpec, *, masks: Optional[np.ndarray] = None,
                                backend="jax")
 
     if masks is None:
+        if isinstance(spec.snapshots, CounterIIDSnapshots):
+            # counter streams regenerate any row range bit-identically from
+            # a start offset, so stream the masks chunk by chunk -- a
+            # million-snapshot spec never materializes the full host matrix
+            # on either backend
+            sn = spec.snapshots
+            step = max(1, chunk_snapshots)
+            chunks = (counter_fault_masks(spec.num_nodes, sn.fault_ratio,
+                                          min(step, sn.samples - off),
+                                          sn.seed, start=off)
+                      for off in range(0, sn.samples, step))
+            total, faulty, placed, chosen = evaluate_mask_stream(
+                models, spec.tp_sizes, chunks, sn.samples,
+                chunk_snapshots=chunk_snapshots, backend=chosen)
+            return SweepResult(spec, names, tps, total, faulty, placed,
+                               backend=chosen)
         masks = spec.snapshots.masks(spec.num_nodes)
     total, faulty, placed, chosen = evaluate_masks(
         models, spec.tp_sizes, masks, chunk_snapshots=chunk_snapshots,

@@ -92,6 +92,11 @@ def _infinitehbd_kernel(model: InfiniteHBDModel, tps: Sequence[int]):
 
     def fn(mask):
         m = _clip(mask, n)
+        # the cumsums deliberately stay jnp.cumsum: swapping in the blocked
+        # GEMM form (repro.kernels.prefix_scan) measured ~10% SLOWER here on
+        # XLA CPU -- the cummax/cummin component scans below dominate and
+        # have no matmul formulation, so the extra padding/reshape traffic
+        # never pays for itself
         # a gap of >= K consecutive faults splits the K-hop line; runk marks
         # every completion of such a run (the component boundaries)
         cs = jnp.concatenate([jnp.zeros(1, jnp.int32),
@@ -341,6 +346,68 @@ def _zero_snapshot_totals(models: Sequence[HBDModel],
         for m in models])
 
 
+class GridEvaluator:
+    """Reusable device grid evaluator bound to one ``(models, tps, width)``.
+
+    Holds the mesh, sharding, jitted grid function and zero-snapshot totals
+    so a *streaming* caller can push chunk after chunk through one compiled
+    executable with donated input buffers -- device memory stays at ~one
+    chunk no matter how many snapshots flow through.  :func:`sweep_grids`
+    is a loop over :meth:`eval_block`; ``repro.sim.engine``'s
+    ``evaluate_mask_stream`` drives one evaluator across an entire mask
+    stream (million-snapshot Monte-Carlo) without ever materializing the
+    full matrix on host or device.
+    """
+
+    def __init__(self, models: Sequence[HBDModel], tps: Sequence[int],
+                 width: int, gen: Optional[MaskGen] = None):
+        require(models)
+        self.models = list(models)
+        self.tps = [int(t) for t in tps]
+        self.width = width
+        self.gen = gen
+        self.mesh = _mesh()
+        self.ndev = 1 if self.mesh is None else self.mesh.devices.size
+        self.sharding = (None if self.mesh is None
+                         else NamedSharding(self.mesh, P(_SNAP_AXIS)))
+        self.fn = _grid_fn(self.models, self.tps, self.mesh, gen, width)
+
+    def totals(self) -> np.ndarray:
+        """Per-model (A, T) ``total_gpus`` grid (NumPy-engine identical)."""
+        return _zero_snapshot_totals(self.models, self.tps)
+
+    def eval_block(self, block: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Evaluate one block; returns int64 ``(faulty, placed)``, each
+        ``(A, rows, T)``.
+
+        ``block`` is a ``(rows, width)`` bool mask matrix -- or, when the
+        evaluator was built with ``gen``, a ``(rows,) int32`` vector of
+        counter-stream snapshot indices.  Rows are padded on the tail to a
+        device-count multiple and the pad rows discarded.
+        """
+        rows = block.shape[0]
+        padded = -(-rows // self.ndev) * self.ndev
+        if padded != rows:                     # pad the tail chunk only
+            if self.gen is None:
+                block = np.concatenate(
+                    [block, np.zeros((padded - rows, self.width), bool)])
+            else:
+                block = np.concatenate(
+                    [block, block[-1] + 1
+                     + np.arange(padded - rows, dtype=np.int32)])
+        # one transfer straight into the sharded layout (device_put from
+        # host numpy) -- no intermediate full copy on the default device
+        arg = (jnp.asarray(block) if self.sharding is None
+               else jax.device_put(block, self.sharding))
+        with warnings.catch_warnings():
+            # bool/int32 donation can't alias int32 outputs; the donation
+            # still releases the chunk buffer eagerly, which is the point
+            warnings.filterwarnings("ignore", message=".*onat.*buffer.*")
+            out = np.asarray(self.fn(arg))     # (padded, A, 2, T)
+        return (out[:rows, :, 0].transpose(1, 0, 2).astype(np.int64),
+                out[:rows, :, 1].transpose(1, 0, 2).astype(np.int64))
+
+
 def sweep_grids(models: Sequence[HBDModel], tps: Sequence[int], *,
                 masks: Optional[np.ndarray] = None,
                 gen: Optional[MaskGen] = None,
@@ -365,38 +432,18 @@ def sweep_grids(models: Sequence[HBDModel], tps: Sequence[int], *,
     placed = np.zeros((a_count, snaps, t_count), dtype=np.int64)
     if snaps == 0:  # NumPy engine's zero-snapshot grid keeps totals at zero
         return total, faulty, placed
-    total[:] = _zero_snapshot_totals(models, tps)
 
-    mesh = _mesh()
-    ndev = 1 if mesh is None else mesh.devices.size
+    ev = GridEvaluator(models, tps, width, gen=gen)
+    total[:] = ev.totals()
     chunk = max(1, chunk_snapshots)
-    chunk = -(-chunk // ndev) * ndev           # multiple of the device count
-    fn = _grid_fn(models, tps, mesh, gen, width)
-    sharding = (None if mesh is None
-                else NamedSharding(mesh, P(_SNAP_AXIS)))
-
+    chunk = -(-chunk // ev.ndev) * ev.ndev     # multiple of the device count
     for lo in range(0, snaps, chunk):
         hi = min(lo + chunk, snaps)
-        rows = hi - lo
-        padded = -(-rows // ndev) * ndev       # pad the tail chunk only
-        if masks is not None:
-            block = masks[lo:hi]
-            if padded != rows:
-                block = np.concatenate(
-                    [block, np.zeros((padded - rows, width), bool)])
-        else:
-            block = np.arange(lo, lo + padded, dtype=np.int32)
-        # one transfer straight into the sharded layout (device_put from
-        # host numpy) -- no intermediate full copy on the default device
-        arg = (jnp.asarray(block) if sharding is None
-               else jax.device_put(block, sharding))
-        with warnings.catch_warnings():
-            # bool/int32 donation can't alias int32 outputs; the donation
-            # still releases the chunk buffer eagerly, which is the point
-            warnings.filterwarnings("ignore", message=".*onat.*buffer.*")
-            out = np.asarray(fn(arg))          # (padded, A, 2, T)
-        faulty[:, lo:hi] = out[:rows, :, 0].transpose(1, 0, 2)
-        placed[:, lo:hi] = out[:rows, :, 1].transpose(1, 0, 2)
+        block = (masks[lo:hi] if masks is not None
+                 else np.arange(lo, hi, dtype=np.int32))
+        f, p = ev.eval_block(block)
+        faulty[:, lo:hi] = f
+        placed[:, lo:hi] = p
     return total, faulty, placed
 
 
@@ -424,6 +471,6 @@ def num_devices() -> int:
 
 
 __all__ = [
-    "HAVE_JAX", "MaskGen", "available_for", "require", "sweep_grids",
-    "counter_masks_device", "num_devices",
+    "HAVE_JAX", "GridEvaluator", "MaskGen", "available_for", "require",
+    "sweep_grids", "counter_masks_device", "num_devices",
 ]

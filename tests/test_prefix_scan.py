@@ -1,0 +1,105 @@
+"""prefix_scan kernel package: every implementation (host blocked GEMM,
+fused XLA formulation, Pallas kernel) bit-for-bit equals the sequential
+cumsum oracle -- and the host path reproduces the DCN kernel's historical
+GEMM-as-cumsum trick exactly on a pinned grid."""
+
+import numpy as np
+import pytest
+
+from repro.kernels.prefix_scan.host import mask_cumsum
+
+SHAPES = [(1, 0), (1, 1), (3, 7), (64, 8), (16, 128), (8, 129),
+          (8, 300), (2, 1024), (4, 3, 40), (2, 3, 4, 8), (0, 5)]
+
+
+def _masks(shape, seed=0, p=0.3):
+    return np.random.default_rng(seed).random(shape) < p
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_host_mask_cumsum_matches_np_cumsum(shape):
+    m = _masks(shape, seed=hash(shape) % 1000)
+    want = np.cumsum(m, axis=-1, dtype=np.int32)
+    got = mask_cumsum(m)
+    assert got.dtype == np.int32
+    assert np.array_equal(got, want)
+
+
+def test_host_mask_cumsum_dense_and_degenerate():
+    assert np.array_equal(mask_cumsum(np.ones((4, 513), bool)),
+                          np.cumsum(np.ones((4, 513), bool), axis=-1))
+    assert mask_cumsum(np.zeros((3, 0), bool)).shape == (3, 0)
+    with pytest.raises(TypeError):
+        mask_cumsum(np.ones((2, 4), np.int32))
+
+
+def test_host_blocking_invariance():
+    m = _masks((6, 777), seed=3)
+    want = np.cumsum(m, axis=-1, dtype=np.int32)
+    for block in (1, 2, 16, 128, 776, 777, 800):
+        assert np.array_equal(mask_cumsum(m, block=block), want), block
+
+
+# --------------------------------------------------- old-trick regression
+
+def _old_gemm_trick(mask: np.ndarray) -> np.ndarray:
+    """The DCN kernel's historical ``_cumsum_last``: a dense float32 GEMM
+    against a lower-triangular ones matrix for short axes, ``np.cumsum``
+    past 128 (verbatim from ``repro.dcn.kernel`` before the fused kernel
+    replaced it)."""
+    length = mask.shape[-1]
+    if length > 128:
+        return np.cumsum(mask, axis=-1, dtype=np.int32)
+    tri = np.tril(np.ones((length, length), dtype=np.float32)).T
+    return (mask.astype(np.float32) @ tri).astype(np.int32)
+
+
+def test_bit_equality_with_old_gemm_trick_pinned_grid():
+    """Satellite pin: the fused kernel must reproduce the replaced
+    GEMM-as-cumsum workaround bit-for-bit on the DCN chunk-grid shapes
+    (carve axes on both sides of the old 128 cutoff)."""
+    rng = np.random.default_rng(42)
+    for shape, p in [((256, 8), 0.07), ((32, 16, 8), 0.02), ((64, 64), 0.3),
+                     ((128, 128), 0.5), ((16, 200), 0.07), ((4, 1000), 0.9)]:
+        m = rng.random(shape) < p
+        assert np.array_equal(mask_cumsum(m), _old_gemm_trick(m)), shape
+
+
+# ------------------------------------------------------- device kernels
+
+def test_blocked_cumsum_jit_matches_ref():
+    jax = pytest.importorskip("jax")
+    from repro.kernels.prefix_scan.ops import prefix_scan
+    from repro.kernels.prefix_scan.ref import prefix_scan_ref
+    for shape in [(2, 5), (3, 128), (4, 1000), (1, 10000)]:
+        m = _masks(shape, seed=shape[-1])
+        want = np.asarray(prefix_scan_ref(jax.numpy.asarray(m)))
+        got = np.asarray(prefix_scan(jax.numpy.asarray(m), impl="blocked"))
+        assert np.array_equal(got, want), shape
+        auto = np.asarray(prefix_scan(jax.numpy.asarray(m)))
+        assert np.array_equal(auto, want), shape
+
+
+def test_pallas_prefix_scan_small():
+    jax = pytest.importorskip("jax")
+    from repro.kernels.prefix_scan.prefix_scan import prefix_scan_pallas
+    m = _masks((4, 64), seed=9)
+    want = np.cumsum(m, axis=-1, dtype=np.int32)
+    got = np.asarray(prefix_scan_pallas(jax.numpy.asarray(m), block=32,
+                                        row_block=2))
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("shape,block,row_block", [
+    ((5, 37), 16, 2), ((3, 128), 128, 8), ((2, 300), 128, 8),
+    ((9, 130), 64, 4), ((1, 1), 128, 8),
+])
+def test_pallas_prefix_scan_sweep(shape, block, row_block):
+    jax = pytest.importorskip("jax")
+    from repro.kernels.prefix_scan.prefix_scan import prefix_scan_pallas
+    m = _masks(shape, seed=block + shape[-1])
+    want = np.cumsum(m, axis=-1, dtype=np.int32)
+    got = np.asarray(prefix_scan_pallas(jax.numpy.asarray(m), block=block,
+                                        row_block=row_block))
+    assert np.array_equal(got, want)

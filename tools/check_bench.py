@@ -11,7 +11,13 @@ root for each:
   * the payload is a full-mode run (``"smoke": false``) -- CI smoke runs
     write throwaway grids and must not be committed as baselines;
   * the section's required keys are present (see ``REQUIRED_KEYS``), so a
-    half-written or hand-edited baseline fails loudly.
+    half-written or hand-edited baseline fails loudly;
+  * the baseline is not *stale*: its last git commit must not predate the
+    last commit touching the benchmark script that writes it (a gate whose
+    thresholds or grid changed needs its baseline regenerated -- the
+    failure message prints the exact regenerate command).  Skipped when
+    either file is untracked or git history is unavailable (shallow
+    clones: the CI checkout uses ``fetch-depth: 0`` so it is not).
 
 A section added to ``benchmarks/`` with a ``write_json`` call and no
 committed baseline fails this gate -- that is the point.  Wired into the
@@ -24,8 +30,10 @@ from __future__ import annotations
 
 import json
 import re
+import subprocess
 import sys
 from pathlib import Path
+from typing import Optional
 
 ROOT = Path(__file__).resolve().parent.parent
 
@@ -45,9 +53,28 @@ REQUIRED_KEYS = {
              "bit_exact_vs_scalar_rows"},
     "matrix": {"smoke", "num_nodes", "architectures", "fault_ratios",
                "backends", "bit_exact_backends", "rows"},
+    "scale": {"smoke", "snapshots", "num_nodes", "architectures", "backends",
+              "gate_floors_snaps_per_sec", "numpy_snaps_per_sec",
+              "overlap_snapshots", "stream_equal", "full_snaps_per_sec",
+              "peak_rss_mb", "churn_stream_equal", "runtime"},
 }
 
 WRITE_JSON_RE = re.compile(r"""write_json\(\s*["']([A-Za-z0-9_]+)["']""")
+
+
+def _commit_time(relpath: str) -> Optional[int]:
+    """Unix time of the last commit touching ``relpath``; None when the
+    file is untracked or git history is unavailable."""
+    try:
+        out = subprocess.run(
+            ["git", "log", "-1", "--format=%ct", "--", relpath],
+            capture_output=True, text=True, cwd=ROOT, timeout=30)
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    if out.returncode != 0:
+        return None
+    stamp = out.stdout.strip()
+    return int(stamp) if stamp.isdigit() else None
 
 
 def gated_sections() -> dict:
@@ -94,6 +121,17 @@ def check_section(section: str, source: str) -> list:
             problems.append(
                 f"{section}: {path.name} is missing required keys: "
                 f"{missing}")
+    # staleness: a baseline committed before the benchmark script's last
+    # change was measured against a different gate/grid
+    baseline_ct = _commit_time(path.name)
+    script_ct = _commit_time(f"benchmarks/{source}")
+    if baseline_ct is not None and script_ct is not None \
+            and baseline_ct < script_ct:
+        problems.append(
+            f"{section}: {path.name} (committed {script_ct - baseline_ct}s "
+            f"earlier) predates the last change to benchmarks/{source} -- "
+            f"regenerate with `PYTHONPATH=src python -m benchmarks."
+            f"{source[:-3]}` and commit the new {path.name}")
     return problems
 
 

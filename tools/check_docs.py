@@ -26,6 +26,13 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 DOCS = ("docs/ARCHITECTURE.md", "README.md")
 
+#: Headings a doc must carry (exact markdown line prefix).  The
+#: architecture doc documents the perf/CI gate contract -- a refactor that
+#: drops the section silently un-documents what CI enforces.
+REQUIRED_HEADINGS = {
+    "docs/ARCHITECTURE.md": ("## Performance & CI gates",),
+}
+
 _TOKEN = re.compile(r"`([A-Za-z0-9_][A-Za-z0-9_./-]*)`")
 
 
@@ -79,8 +86,13 @@ def main() -> int:
             missing.append((rel, rel, "doc file itself"))
             continue
         found = check_file(rel)
-        checked += len(set(_TOKEN.findall((ROOT / rel).read_text())))
+        text = (ROOT / rel).read_text()
+        checked += len(set(_TOKEN.findall(text)))
         missing.extend(found)
+        for heading in REQUIRED_HEADINGS.get(rel, ()):
+            if not any(line.strip() == heading
+                       for line in text.splitlines()):
+                missing.append((rel, heading, "required heading"))
     if missing:
         print("docs reference missing modules/files:")
         for doc, tok, kind in missing:
