@@ -106,6 +106,9 @@ def run(smoke: bool = False, backend: str = "both", traces: int = None):
 
 def main():
     import argparse
+
+    from .common import pin_runtime
+    pin_runtime()   # enable telemetry before the engines run
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     p.add_argument("--smoke", action="store_true",
                    help="CI-sized ensemble (no speedup gate)")

@@ -2,7 +2,15 @@
 ``name,us_per_call,derived`` where ``derived`` is the paper-comparable
 metric (waste ratio, MFU, cross-ToR share, ...).  Sections with CI gates
 also persist a ``BENCH_<name>.json`` payload (uploaded as a workflow
-artifact by the nightly job)."""
+artifact by the nightly job).
+
+Telemetry: :func:`pin_runtime` enables ``repro.obs`` collection, so every
+benchmark run gathers the engines' spans and counters, and
+:func:`write_json` stamps the :func:`repro.obs.summary` block into every
+gated payload beside the runtime provenance -- a perf regression in a
+baseline comes with an attribution (which span grew, which counter moved)
+instead of one opaque wall-time number.  ``REPRO_TRACE=1`` additionally
+exports the full Perfetto trace at exit (``repro.obs``)."""
 
 from __future__ import annotations
 
@@ -11,6 +19,8 @@ import os
 import sys
 import time
 from typing import Callable, Optional
+
+from repro import obs
 
 #: Known tcmalloc locations (the fleet-standard ``LD_PRELOAD`` for JAX CPU
 #: hosts; see the CI workflow, which preloads it when the distro ships it).
@@ -42,6 +52,10 @@ def pin_runtime(devices: Optional[int] = None) -> dict:
         flags = (flags + " " if flags else "") \
             + f"--xla_force_host_platform_device_count={devices}"
         os.environ["XLA_FLAGS"] = flags
+    # collect spans/counters for the payload telemetry block (and the
+    # REPRO_TRACE exported trace); enabled-path overhead is block-granular
+    # and the scale section's throughput gates bound it
+    obs.enable()
     preload = os.environ.get("LD_PRELOAD", "")
     runtime = {
         "xla_flags": os.environ.get("XLA_FLAGS", ""),
@@ -61,25 +75,40 @@ def pin_runtime(devices: Optional[int] = None) -> dict:
 _RUNTIME: dict = {}
 
 
-def timed(fn: Callable, *args, **kwargs):
-    t0 = time.perf_counter()
-    out = fn(*args, **kwargs)
-    return out, (time.perf_counter() - t0) * 1e6
+def timed(fn: Callable, *args, name: Optional[str] = None, **kwargs):
+    """Time one call; with ``name`` the call is also a ``bench.<name>``
+    telemetry span (so the exported trace shows each measured region)."""
+    if name is None:
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        return out, (time.perf_counter() - t0) * 1e6
+    with obs.span(f"bench.{name}", cat="bench"):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        return out, (time.perf_counter() - t0) * 1e6
 
 
-def time_runs(fn: Callable, reps: int = 3) -> float:
+def time_runs(fn: Callable, reps: int = 3,
+              name: Optional[str] = None) -> float:
     """Best-of-``reps`` wall time of ``fn()``, seconds.
 
     The speedup gates compare best-of-N on both sides so container timing
     noise (observed ~2x swings) perturbs a ratio instead of deciding it;
     one shared implementation so the timing discipline can't diverge
-    between gated sections."""
+    between gated sections.  With ``name``, each rep is recorded as a
+    ``bench.<name>`` telemetry span (the span's own wall clock; the
+    returned best-of is unchanged)."""
     best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
+    for rep in range(reps):
+        with obs.span(f"bench.{name}", cat="bench", rep=rep) \
+                if name else _NO_SPAN:
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
     return best
+
+
+_NO_SPAN = obs.NULL_SPAN
 
 
 def row(name: str, us: float, derived) -> str:
@@ -100,6 +129,9 @@ def write_json(section: str, payload: dict) -> str:
     payload = dict(payload)
     payload.setdefault("runtime", dict(_RUNTIME) if _RUNTIME
                        else pin_runtime())
+    # spans/counters collected since the run started: the payload's perf
+    # attribution (tools/check_bench.py validates the shape)
+    payload.setdefault("telemetry", obs.summary())
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     return path

@@ -87,7 +87,7 @@ def run(smoke: bool = False, backend: str = "both", snapshots: int = None):
     ref = run_cost_sweep_scalar(spec, max_samples=n_scalar)
     scalar_s = time_runs(
         lambda: run_cost_sweep_scalar(spec, max_samples=n_scalar),
-        reps=1 if smoke else 2)
+        reps=1 if smoke else 2, name="cost.scalar")
     scalar_rows_per_sec = n_scalar * len(RATIOS) / scalar_s
     payload.update(scalar_rows=n_scalar * len(RATIOS),
                    scalar_s=round(scalar_s, 4),
@@ -108,7 +108,8 @@ def run(smoke: bool = False, backend: str = "both", snapshots: int = None):
         res = run_cost_sweep(spec, backend=leg)
         assert _grids_equal(res, ref, n_scalar), f"{leg} grids != scalar"
         leg_results[leg] = res
-        leg_s = time_runs(lambda: run_cost_sweep(spec, backend=leg))
+        leg_s = time_runs(lambda: run_cost_sweep(spec, backend=leg),
+                          name=f"cost.{leg}")
         leg_rps = cells / leg_s
         speedup = leg_rps / scalar_rows_per_sec
         payload.update({f"{leg}_s": round(leg_s, 4),
@@ -164,6 +165,9 @@ def run(smoke: bool = False, backend: str = "both", snapshots: int = None):
 
 def main():
     import argparse
+
+    from .common import pin_runtime
+    pin_runtime()   # enable telemetry before the engines run
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     p.add_argument("--smoke", action="store_true",
                    help="CI-sized grid (no speedup gate)")

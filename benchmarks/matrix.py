@@ -45,7 +45,8 @@ def run(smoke: bool = False, backend: str = "both", snapshots: int = None):
     for leg in legs:
         leg_s = time_runs(lambda: results.__setitem__(
             leg, comparison_matrix(num_nodes, fault_ratios=RATIOS,
-                                   samples=samples, backend=leg)), reps=1)
+                                   samples=samples, backend=leg)),
+            reps=1, name=f"matrix.{leg}")
         payload[f"{leg}_s"] = round(leg_s, 4)
         row(f"matrix/{leg}/archs{len(arches)}/nodes{num_nodes}",
             leg_s * 1e6, {"rows": len(results[leg])})
@@ -86,6 +87,9 @@ def run(smoke: bool = False, backend: str = "both", snapshots: int = None):
 
 def main():
     import argparse
+
+    from .common import pin_runtime
+    pin_runtime()   # enable telemetry before the engines run
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     p.add_argument("--smoke", action="store_true",
                    help="CI-sized grid")

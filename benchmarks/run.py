@@ -9,6 +9,13 @@ for a shrunken grid (CI-sized: seconds, not minutes); ``--backend`` /
 ``--snapshots`` / ``--traces`` are forwarded to sections that accept them
 (the sweep/churn sections' engine matrices and scale knobs); sections that
 predate the flags run unchanged.
+
+Telemetry is always collected (``pin_runtime`` enables ``repro.obs``);
+every section runs under a ``bench.<section>`` span and each gated payload
+carries the span/counter summary.  ``REPRO_TRACE=1`` additionally exports
+the full Perfetto trace to ``REPRO_TRACE_PATH`` (default
+``repro.trace.json``) at exit -- load it at https://ui.perfetto.dev or
+summarize with ``python tools/trace_report.py``.
 """
 
 from __future__ import annotations
@@ -39,6 +46,7 @@ def main() -> None:
                    "snapshots": args.snapshots, "traces": args.traces}
     print("name,us_per_call,derived")
     failed = []
+    from repro import obs
     for name in want:
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
@@ -46,7 +54,8 @@ def main() -> None:
             params = inspect.signature(mod.run).parameters
             kwargs = {k: v for k, v in forwardable.items()
                       if k in params and v is not None}
-            mod.run(**kwargs)
+            with obs.span(f"bench.{name}", cat="bench", smoke=args.smoke):
+                mod.run(**kwargs)
         except Exception as e:  # noqa: BLE001 - report and continue
             failed.append(name)
             print(f"# {name} FAILED: {type(e).__name__}: {e}")

@@ -98,7 +98,7 @@ def run(smoke: bool = False, backend: str = "both", snapshots: int = None):
         run_sweep(wspec, backend=leg, chunk_snapshots=chunk)   # warm caches
         best = time_runs(
             lambda: run_sweep(wspec, backend=leg, chunk_snapshots=chunk),
-            reps=3)
+            reps=3, name=f"scale.stream.{leg}")
         sps = timed_n / best
         payload[f"{leg}_snaps_per_sec"] = round(sps, 1)
         row(f"scale_stream/{leg}/snaps{timed_n}/nodes{nodes}",

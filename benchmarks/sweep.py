@@ -73,7 +73,8 @@ def run(smoke: bool = False, backend: str = "both", snapshots: int = None):
     if scalar_s is not None:
         assert np.array_equal(scalar_placed, numpy_res.placed_gpus)
     numpy_s = time_runs(lambda: run_sweep(spec, masks=masks, models=models,
-                                           backend="numpy"))
+                                           backend="numpy"),
+                        name="sweep.numpy")
     payload["numpy_s"] = round(numpy_s, 4)
     scalar_speedup = (scalar_s / numpy_s) if scalar_s else None
     row(f"sweep_engine/numpy/snapshots{samples}/archs{len(ARCHES)}",
@@ -97,7 +98,8 @@ def run(smoke: bool = False, backend: str = "both", snapshots: int = None):
         assert np.array_equal(jax_res.faulty_gpus, numpy_res.faulty_gpus)
         assert np.array_equal(jax_res.total_gpus, numpy_res.total_gpus)
         jax_s = time_runs(lambda: run_sweep(spec, masks=masks,
-                                             models=models, backend="jax"))
+                                             models=models, backend="jax"),
+                          name="sweep.jax")
         devices = jax_backend.num_devices()
         payload.update({"jax_s": round(jax_s, 4), "devices": devices,
                         "jax_speedup_vs_numpy": round(numpy_s / jax_s, 2)})
@@ -123,6 +125,9 @@ def run(smoke: bool = False, backend: str = "both", snapshots: int = None):
 
 def main():
     import argparse
+
+    from .common import pin_runtime
+    pin_runtime()   # enable telemetry before the engines run
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     p.add_argument("--smoke", action="store_true",
                    help="CI-sized grid (no speedup gates)")

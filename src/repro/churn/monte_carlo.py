@@ -17,11 +17,13 @@ same bit-for-bit grids (``tests/test_stream.py``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from .. import obs
 from ..core.trace import FaultTrace, generate_trace, to_4gpu_trace
+from ..obs.progress import Progress
 from ..sim.engine import evaluate_mask_stream, evaluate_masks
 from ..sim.scenario import DEFAULT_ARCHITECTURES, make_model
 from .replay import replay_trace
@@ -109,7 +111,9 @@ class ChurnEnsemble:
 def monte_carlo_replay(spec: ChurnSpec,
                        traces: Union[int, Sequence[FaultTrace]], *,
                        engine: str = "batched", backend: str = "auto",
-                       chunk_snapshots: int = 4096) -> ChurnEnsemble:
+                       chunk_snapshots: int = 4096,
+                       progress: Optional[Callable[[Progress], None]] = None
+                       ) -> ChurnEnsemble:
     """Replay ``traces`` realizations of ``spec`` into a :class:`ChurnEnsemble`.
 
     ``traces`` is a count (realizations ``0..traces-1`` are generated) or a
@@ -121,6 +125,11 @@ def monte_carlo_replay(spec: ChurnSpec,
     (re-chunked across realization boundaries), bounding peak memory at
     ~one evaluation block for arbitrarily large ensembles;
     ``engine="scalar"`` loops the event-by-event reference replay.
+
+    ``progress`` (``engine="streamed"`` only) is forwarded to
+    ``evaluate_mask_stream`` -- one :class:`repro.obs.Progress` per
+    evaluated block; the default publishes ``sim.stream.*`` telemetry
+    gauges (blocks done, snapshots/sec, ETA).
     """
     if isinstance(traces, int):
         realizations = [spec.trace(r) for r in range(traces)]
@@ -139,23 +148,26 @@ def monte_carlo_replay(spec: ChurnSpec,
     models = spec.models()
     names = [m.name for m in models]
     tps = np.asarray(spec.tp_sizes, dtype=np.int64)
-    edges_list = [tr.interval_edges() for tr in realizations]
-    if engine == "streamed":
-        chunks = (tr.fault_masks(e)
-                  for tr, e in zip(realizations, edges_list))
-        total, faulty, placed, chosen = evaluate_mask_stream(
-            models, spec.tp_sizes, chunks,
-            int(sum(len(e) for e in edges_list)),
-            chunk_snapshots=chunk_snapshots, backend=backend)
-    else:
-        if realizations:
-            masks = np.concatenate([tr.fault_masks(e) for tr, e
-                                    in zip(realizations, edges_list)])
+    with obs.span("churn.monte_carlo_replay", engine=engine,
+                  realizations=len(realizations)):
+        edges_list = [tr.interval_edges() for tr in realizations]
+        if engine == "streamed":
+            chunks = (tr.fault_masks(e)
+                      for tr, e in zip(realizations, edges_list))
+            total, faulty, placed, chosen = evaluate_mask_stream(
+                models, spec.tp_sizes, chunks,
+                int(sum(len(e) for e in edges_list)),
+                chunk_snapshots=chunk_snapshots, backend=backend,
+                progress=progress)
         else:
-            masks = np.zeros((0, spec.num_nodes), dtype=bool)
-        total, faulty, placed, chosen = evaluate_masks(
-            models, spec.tp_sizes, masks, chunk_snapshots=chunk_snapshots,
-            backend=backend)
+            if realizations:
+                masks = np.concatenate([tr.fault_masks(e) for tr, e
+                                        in zip(realizations, edges_list)])
+            else:
+                masks = np.zeros((0, spec.num_nodes), dtype=bool)
+            total, faulty, placed, chosen = evaluate_masks(
+                models, spec.tp_sizes, masks,
+                chunk_snapshots=chunk_snapshots, backend=backend)
 
     tls = []
     lo = 0

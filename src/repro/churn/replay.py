@@ -27,6 +27,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from .. import obs
 from ..core.control_plane import ClusterManager, ControlPlaneConfig
 from ..core.placement import InsufficientCapacityError
 from ..core.trace import FaultTrace
@@ -91,6 +92,16 @@ def replay_trace(trace: FaultTrace, *, tp_sizes: Sequence[int] = (32,),
     edges = trace.interval_edges()
     tps = np.asarray(list(tp_sizes), dtype=np.int64)
 
+    with obs.span("churn.replay_trace", engine=engine,
+                  intervals=len(edges), models=len(models)):
+        return _replay_trace(trace, models, edges, tps, tp_sizes, engine,
+                             backend, chunk_snapshots, job, config,
+                             max_events, gpus_per_node)
+
+
+def _replay_trace(trace, models, edges, tps, tp_sizes, engine, backend,
+                  chunk_snapshots, job, config, max_events,
+                  gpus_per_node) -> ChurnTimeline:
     if engine == "batched":
         masks = trace.fault_masks(edges)
         total, faulty, placed, chosen = evaluate_masks(
@@ -143,26 +154,46 @@ def control_plane_replay(trace: FaultTrace, job: ChurnJob = ChurnJob(), *,
                         agg_domain=job.agg_domain, seed=job.seed,
                         incremental=True, config=config)
     records: List[ReconfigRecord] = []
-    for t, _, faulted, repaired in _occupancy_transitions(trace):
-        now_s = t * 3600.0
-        for kind, nodes in (("repair", repaired), ("fault", faulted)):
-            if not len(nodes):
-                continue
-            node_set = {int(u) for u in nodes}
-            fn = cm.on_repair if kind == "repair" else cm.on_fault
-            try:
-                ev = fn(now_s, node_set, job.tp_size, job.dp_size,
-                        job.pod_size)
-                groups = len(ev.plan.placement)
-                records.append(ReconfigRecord(
-                    t, kind, tuple(sorted(node_set)),
-                    (ev.settle_s - ev.time_s) * 1e6,
-                    groups // job.pod_size, groups * job.tp_size))
-            except InsufficientCapacityError:
-                records.append(ReconfigRecord(
-                    t, kind, tuple(sorted(node_set)), None, 0, 0))
-        if max_events is not None and len(records) >= max_events:
-            break
+    prev_gpus = job.tp_size * job.dp_size
+    with obs.span("churn.control_plane_replay", nodes=trace.num_nodes,
+                  horizon_h=trace.horizon_h):
+        for t, _, faulted, repaired in _occupancy_transitions(trace):
+            now_s = t * 3600.0
+            for kind, nodes in (("repair", repaired), ("fault", faulted)):
+                if not len(nodes):
+                    continue
+                node_set = {int(u) for u in nodes}
+                fn = cm.on_repair if kind == "repair" else cm.on_fault
+                # one span per reconfiguration event: its attributes carry
+                # everything Fig. 18's latency table needs (kind, simulated
+                # time, settle latency, surviving DP degree, GPU delta), so
+                # the table is derivable from the trace file alone
+                with obs.span("churn.reconfig", cat="churn", kind=kind,
+                              sim_time_h=round(t, 4),
+                              nodes=len(node_set)) as sp:
+                    obs.count("churn.reconfig_events")
+                    try:
+                        ev = fn(now_s, node_set, job.tp_size, job.dp_size,
+                                job.pod_size)
+                        groups = len(ev.plan.placement)
+                        latency_us = (ev.settle_s - ev.time_s) * 1e6
+                        placed_gpus = groups * job.tp_size
+                        records.append(ReconfigRecord(
+                            t, kind, tuple(sorted(node_set)), latency_us,
+                            groups // job.pod_size, placed_gpus))
+                        sp.set(latency_us=round(latency_us, 3),
+                               dp_degree=groups // job.pod_size,
+                               placed_gpus=placed_gpus,
+                               gpu_delta=placed_gpus - prev_gpus)
+                        prev_gpus = placed_gpus
+                    except InsufficientCapacityError:
+                        records.append(ReconfigRecord(
+                            t, kind, tuple(sorted(node_set)), None, 0, 0))
+                        obs.count("churn.infeasible_replans")
+                        sp.set(infeasible=True, gpu_delta=0 - prev_gpus)
+                        prev_gpus = 0
+            if max_events is not None and len(records) >= max_events:
+                break
     return records
 
 

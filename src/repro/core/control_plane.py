@@ -18,6 +18,7 @@ from typing import Callable, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
+from .. import obs
 from .ocstrx import RECONFIG_LATENCY_US
 from .placement import InsufficientCapacityError, MeshPlan, plan_mesh
 from .topology import KHopRingTopology, TopologyConfig
@@ -134,7 +135,9 @@ class ClusterManager:
             for u in nodes:
                 apply(u)
             if self._tracker.faults == self.physical_faults:
+                obs.count("control_plane.tracker_delta_apply")
                 return self._tracker
+        obs.count("control_plane.tracker_rebuild")
         return self._build_tracker(m)
 
     def _sync_ft_tracker(self, tp_size: int, kind: str,
@@ -153,12 +156,14 @@ class ClusterManager:
             for u in nodes:
                 apply(u)
             if ft.faults == self.physical_faults:
+                obs.count("control_plane.ft_tracker_delta_apply")
                 return ft
         cfg = FatTreeConfig(self.cfg.num_nodes, self.cfg.gpus_per_node,
                             self.nodes_per_tor, self.agg_domain, self.k)
         if not cfg.regular():
             self._ft_tracker = None
             return None
+        obs.count("control_plane.ft_tracker_rebuild")
         self._ft_tracker = IncrementalFatTreeOrchestrator(
             self.cfg.num_nodes, self.cfg.gpus_per_node, self.nodes_per_tor,
             self.agg_domain, tp_size, self.k, set(self.physical_faults))
@@ -258,4 +263,8 @@ class ClusterManager:
         if not step_times_s:
             return set()
         med = float(np.median(list(step_times_s.values())))
-        return {u for u, t in step_times_s.items() if t > threshold * med}
+        flagged = {u for u, t in step_times_s.items()
+                   if t > threshold * med}
+        if flagged:
+            obs.count("control_plane.stragglers_flagged", len(flagged))
+        return flagged

@@ -25,6 +25,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from .. import obs
+
 _U32 = np.uint32
 _MASK32 = _U32(0xFFFFFFFF)
 _ROTATIONS = ((13, 15, 26, 6), (17, 29, 16, 24))
@@ -182,38 +184,45 @@ def counter_fault_masks(num_nodes: int, node_fault_ratio: float,
         return np.zeros((samples, num_nodes), dtype=bool)
     if thresh >= (1 << 32):
         return np.ones((samples, num_nodes), dtype=bool)
-    root = threefry_seed(seed)
-    out = np.empty((samples, num_nodes), dtype=bool)
-    t32 = _U32(thresh)
-    rows_per_block = max(1, _MASK_BLOCK_LANES // max(num_nodes, 1))
-    # per-row counter layout: the original stream splits the padded flat
-    # iota [0..n-1, (0)] in half; the partitionable stream runs two
-    # parallel lanes (hi=0, lo=iota) XORed
-    if partitionable:
-        half = num_nodes
-        c0_row = np.zeros(num_nodes, _U32)
-        c1_row = np.arange(num_nodes, dtype=_U32)
-    else:
-        half = (num_nodes + 1) // 2
-        flat = np.arange(2 * half, dtype=_U32)
-        flat[num_nodes:] = 0                   # odd width pads one zero
-        c0_row, c1_row = flat[:half], flat[half:]
-    for lo_r in range(0, samples, rows_per_block):
-        hi_r = min(lo_r + rows_per_block, samples)
-        rows = hi_r - lo_r
-        keys = threefry_fold_in_batch(
-            root, np.arange(start + lo_r, start + hi_r, dtype=np.int64))
-        x0 = np.broadcast_to(c0_row, (rows, half)).copy()
-        x1 = np.broadcast_to(c1_row, (rows, half)).copy()
-        tmp = np.empty_like(x0)
-        _threefry2x32_inplace(keys[:, :1], keys[:, 1:], x0, x1, tmp)
+    with obs.span("prng.counter_fault_masks", samples=samples,
+                  nodes=num_nodes, start=start) as sp:
+        root = threefry_seed(seed)
+        out = np.empty((samples, num_nodes), dtype=bool)
+        t32 = _U32(thresh)
+        rows_per_block = max(1, _MASK_BLOCK_LANES // max(num_nodes, 1))
+        # per-row counter layout: the original stream splits the padded flat
+        # iota [0..n-1, (0)] in half; the partitionable stream runs two
+        # parallel lanes (hi=0, lo=iota) XORed
         if partitionable:
-            np.bitwise_xor(x0, x1, out=x0)
-            np.less(x0, t32, out=out[lo_r:hi_r])
+            half = num_nodes
+            c0_row = np.zeros(num_nodes, _U32)
+            c1_row = np.arange(num_nodes, dtype=_U32)
         else:
-            np.less(x0, t32, out=out[lo_r:hi_r, :half])
-            np.less(x1[:, :num_nodes - half], t32,
-                    out=out[lo_r:hi_r, half:])
+            half = (num_nodes + 1) // 2
+            flat = np.arange(2 * half, dtype=_U32)
+            flat[num_nodes:] = 0               # odd width pads one zero
+            c0_row, c1_row = flat[:half], flat[half:]
+        for lo_r in range(0, samples, rows_per_block):
+            hi_r = min(lo_r + rows_per_block, samples)
+            rows = hi_r - lo_r
+            keys = threefry_fold_in_batch(
+                root, np.arange(start + lo_r, start + hi_r, dtype=np.int64))
+            x0 = np.broadcast_to(c0_row, (rows, half)).copy()
+            x1 = np.broadcast_to(c1_row, (rows, half)).copy()
+            tmp = np.empty_like(x0)
+            _threefry2x32_inplace(keys[:, :1], keys[:, 1:], x0, x1, tmp)
+            if partitionable:
+                np.bitwise_xor(x0, x1, out=x0)
+                np.less(x0, t32, out=out[lo_r:hi_r])
+            else:
+                np.less(x0, t32, out=out[lo_r:hi_r, :half])
+                np.less(x1[:, :num_nodes - half], t32,
+                        out=out[lo_r:hi_r, half:])
+        obs.count("prng.masks_generated", samples)
+        if obs.enabled():
+            rss = obs.rss_mb()
+            obs.gauge("prng.rss_mb", rss)
+            sp.set(rss_mb=round(rss, 1))
     return out
 
 

@@ -27,6 +27,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs
 from ..core.cost_model import (ArchBOM, GPU_UNIT_COST, aggregate_cost,
                                bom_for)
 from ..sim.engine import run_sweep
@@ -160,22 +161,28 @@ def run_cost_sweep(spec: CostSpec, *, backend: str = "auto",
     faulty, placed = [], []
     total = None
     chosen = backend
-    for ri in range(len(spec.fault_ratios)):
-        res = run_sweep(spec.scenario(ri), models=models, backend=backend,
-                        chunk_snapshots=chunk_snapshots)
-        total, chosen = res.total_gpus, res.backend
-        faulty.append(res.faulty_gpus)
-        placed.append(res.placed_gpus)
-    shape = (0, len(models), 0, len(spec.tp_sizes))
-    faulty = np.stack(faulty) if faulty else np.zeros(shape, np.int64)
-    placed = np.stack(placed) if placed else np.zeros(shape, np.int64)
-    if total is None:
-        total = np.zeros((len(models), len(spec.tp_sizes)), np.int64)
-        chosen = "numpy"
-    cost = np.stack([cost_grid(total, placed[ri], boms,
-                               gpu_unit_cost=spec.gpu_unit_cost)
-                     for ri in range(placed.shape[0])]) if placed.shape[0] \
-        else np.zeros(shape, np.float64)
+    with obs.span("cost.run_cost_sweep", ratios=len(spec.fault_ratios),
+                  architectures=len(models)):
+        for ri in range(len(spec.fault_ratios)):
+            with obs.span("cost.ratio_row",
+                          fault_ratio=float(spec.fault_ratios[ri])):
+                res = run_sweep(spec.scenario(ri), models=models,
+                                backend=backend,
+                                chunk_snapshots=chunk_snapshots)
+            total, chosen = res.total_gpus, res.backend
+            faulty.append(res.faulty_gpus)
+            placed.append(res.placed_gpus)
+        shape = (0, len(models), 0, len(spec.tp_sizes))
+        faulty = np.stack(faulty) if faulty else np.zeros(shape, np.int64)
+        placed = np.stack(placed) if placed else np.zeros(shape, np.int64)
+        if total is None:
+            total = np.zeros((len(models), len(spec.tp_sizes)), np.int64)
+            chosen = "numpy"
+        with obs.span("cost.cost_grid", rows=placed.shape[0]):
+            cost = np.stack([cost_grid(total, placed[ri], boms,
+                                       gpu_unit_cost=spec.gpu_unit_cost)
+                             for ri in range(placed.shape[0])]) \
+                if placed.shape[0] else np.zeros(shape, np.float64)
     return CostResult(spec, [m.name for m in models],
                       np.asarray(spec.fault_ratios, dtype=np.float64),
                       np.asarray(spec.tp_sizes, dtype=np.int64),

@@ -28,6 +28,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs
 from ..core.orchestrator import (deployment_strategy, greedy_baseline,
                                  orchestrate_fat_tree, traffic_pair_counts,
                                  traffic_volume_shares)
@@ -177,23 +178,25 @@ def evaluate_placements(masks: np.ndarray, cfg: FatTreeConfig, variant: str,
     reference.
     """
     chosen = resolve_backend(backend)
-    if variant == "orchestrated":
-        if not cfg.regular():
-            return _scalar_fat_tree(masks, cfg, tp_size, job_gpus)
-        if chosen == "jax":
-            from . import jax_backend
-            return jax_backend.fat_tree_placements(
-                masks, cfg, [tp_size], [job_gpus],
-                chunk_snapshots=chunk_snapshots)[0]
-        return batched_fat_tree(masks, cfg, tp_size, job_gpus)
-    if variant == "greedy":
-        order = np.asarray(deployment_strategy(
-            cfg.num_nodes, cfg.nodes_per_tor).order, dtype=np.int64)
-        return batched_greedy(masks, cfg, tp_size, job_gpus,
-                              seed=greedy_seed, order=order)
-    if variant == "dgx-island":
-        return batched_dgx_island(masks, cfg, tp_size, job_gpus)
-    raise ValueError(f"unknown variant {variant!r}; known: {VARIANTS}")
+    with obs.span("dcn.evaluate_placements", variant=variant,
+                  tp=tp_size, snapshots=len(masks), backend=chosen):
+        if variant == "orchestrated":
+            if not cfg.regular():
+                return _scalar_fat_tree(masks, cfg, tp_size, job_gpus)
+            if chosen == "jax":
+                from . import jax_backend
+                return jax_backend.fat_tree_placements(
+                    masks, cfg, [tp_size], [job_gpus],
+                    chunk_snapshots=chunk_snapshots)[0]
+            return batched_fat_tree(masks, cfg, tp_size, job_gpus)
+        if variant == "greedy":
+            order = np.asarray(deployment_strategy(
+                cfg.num_nodes, cfg.nodes_per_tor).order, dtype=np.int64)
+            return batched_greedy(masks, cfg, tp_size, job_gpus,
+                                  seed=greedy_seed, order=order)
+        if variant == "dgx-island":
+            return batched_dgx_island(masks, cfg, tp_size, job_gpus)
+        raise ValueError(f"unknown variant {variant!r}; known: {VARIANTS}")
 
 
 def _scalar_fat_tree(masks: np.ndarray, cfg: FatTreeConfig, tp_size: int,
@@ -240,27 +243,30 @@ def run_dcn_sweep(spec: DcnSpec, *, backend: str = "auto",
                             dtype=np.int64)
     # one kernel invocation per (variant, TP) over ALL fault-ratio rows --
     # the fault_ratio axis rides the batched snapshot axis
-    row_masks = [spec.masks(ri) if masks is None
-                 else np.asarray(masks[ri], dtype=bool)
-                 for ri in range(r_count)]
-    stacked = (np.concatenate(row_masks) if row_masks
-               else np.zeros((0, spec.num_nodes), dtype=bool))
-    for ti, tp in enumerate(spec.tp_sizes):
-        job = spec.job_gpus(int(tp))
-        for vi, variant in enumerate(spec.variants):
-            bp = evaluate_placements(
-                stacked, cfg, variant, int(tp), job, backend=chosen,
-                greedy_seed=spec.greedy_seed,
-                chunk_snapshots=chunk_snapshots)
-            counts = batched_pair_counts(bp, cfg.nodes_per_tor,
-                                         cfg.agg_domain)
-            grid_shape = (r_count, spec.samples)
-            for key in _COUNT_KEYS:
-                grids[key][vi, :, :, ti] = counts[key].reshape(grid_shape)
-            feasible[vi, :, :, ti] = bp.feasible.reshape(grid_shape)
-            if variant == "orchestrated":
-                n_constraints[:, :, ti] = bp.n_constraints.reshape(
-                    grid_shape)
+    with obs.span("dcn.run_dcn_sweep", backend=chosen,
+                  variants=v_count, ratios=r_count, tps=t_count):
+        row_masks = [spec.masks(ri) if masks is None
+                     else np.asarray(masks[ri], dtype=bool)
+                     for ri in range(r_count)]
+        stacked = (np.concatenate(row_masks) if row_masks
+                   else np.zeros((0, spec.num_nodes), dtype=bool))
+        for ti, tp in enumerate(spec.tp_sizes):
+            job = spec.job_gpus(int(tp))
+            for vi, variant in enumerate(spec.variants):
+                bp = evaluate_placements(
+                    stacked, cfg, variant, int(tp), job, backend=chosen,
+                    greedy_seed=spec.greedy_seed,
+                    chunk_snapshots=chunk_snapshots)
+                counts = batched_pair_counts(bp, cfg.nodes_per_tor,
+                                             cfg.agg_domain)
+                grid_shape = (r_count, spec.samples)
+                for key in _COUNT_KEYS:
+                    grids[key][vi, :, :, ti] = counts[key].reshape(
+                        grid_shape)
+                feasible[vi, :, :, ti] = bp.feasible.reshape(grid_shape)
+                if variant == "orchestrated":
+                    n_constraints[:, :, ti] = bp.n_constraints.reshape(
+                        grid_shape)
     return DcnSweepResult(spec, list(spec.variants),
                           np.asarray(spec.tp_sizes, dtype=np.int64),
                           grids["groups"], grids["dp_pairs"],

@@ -34,6 +34,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .. import obs
 from ..core.orchestrator import deployment_strategy
 from ..core.reductions import run_segments, segment_carve_counts
 from ..kernels.prefix_scan.host import mask_cumsum
@@ -313,6 +314,7 @@ def _replay_binary_search(count_fn, high: int, need: int,
     best = np.full(snapshots, -1, dtype=np.int64)
     active = lo <= hi
     while active.any():
+        obs.count("dcn.search_probes")
         mid = (lo + hi) // 2
         feas = active & (count_fn(mid) >= need)
         best = np.where(feas, mid, best)
@@ -344,8 +346,12 @@ def batched_fat_tree(masks: np.ndarray, cfg: FatTreeConfig, tp_size: int,
         return BatchedPlacement(members, np.zeros(0, bool),
                                 np.full(0, -1, np.int64), need, m)
 
-    carves = _TierCarves(cfg, masks, order, m)
-    best = _replay_binary_search(carves.counts, cfg.max_constraints, need, s)
+    with obs.span("dcn.carve", snapshots=s, group_nodes=m):
+        carves = _TierCarves(cfg, masks, order, m)
+    with obs.span("dcn.binary_search", snapshots=s,
+                  max_constraints=cfg.max_constraints):
+        best = _replay_binary_search(carves.counts, cfg.max_constraints,
+                                     need, s)
     feasible = best >= 0
 
     # Materialize the placement at the chosen constraint level.

@@ -29,12 +29,14 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Iterable, List, Optional, Sequence, Tuple
+from typing import Callable, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs
 from ..core.hbd_models import HBDModel
 from ..core.prng import counter_fault_masks
+from ..obs.progress import Progress, StreamProgress
 from .scenario import CounterIIDSnapshots, ScenarioSpec
 
 BACKENDS = ("numpy", "jax")
@@ -130,34 +132,40 @@ def evaluate_masks(models: Sequence[HBDModel], tp_sizes: Sequence[int],
     masks = np.asarray(masks, dtype=bool)
     tp_sizes = list(tp_sizes)
 
-    if chosen == "jax":
-        from . import jax_backend
-        total, faulty, placed = jax_backend.sweep_grids(
-            models, tp_sizes, masks=masks, chunk_snapshots=chunk_snapshots)
-        return total, faulty, placed, "jax"
+    with obs.span("sim.evaluate_masks", backend=chosen,
+                  snapshots=masks.shape[0], models=len(models)):
+        obs.count("sim.snapshots_evaluated", masks.shape[0])
+        if chosen == "jax":
+            from . import jax_backend
+            total, faulty, placed = jax_backend.sweep_grids(
+                models, tp_sizes, masks=masks,
+                chunk_snapshots=chunk_snapshots)
+            return total, faulty, placed, "jax"
 
-    snaps = masks.shape[0]
-    tcount = len(tp_sizes)
-    total = np.zeros((len(models), tcount), dtype=np.int64)
-    faulty = np.zeros((len(models), snaps, tcount), dtype=np.int64)
-    placed = np.zeros((len(models), snaps, tcount), dtype=np.int64)
-    chunk_snapshots = max(1, chunk_snapshots)     # same clamp as the jax path
-    for lo in range(0, max(snaps, 1), chunk_snapshots):
-        chunk = masks[lo:lo + chunk_snapshots]
-        if not chunk.shape[0]:
-            break
-        for ai, model in enumerate(models):
-            grid = model.evaluate_batch(chunk, tp_sizes)
-            total[ai] = grid.total_gpus
-            faulty[ai, lo:lo + chunk.shape[0]] = grid.faulty_gpus
-            placed[ai, lo:lo + chunk.shape[0]] = grid.placed_gpus
+        snaps = masks.shape[0]
+        tcount = len(tp_sizes)
+        total = np.zeros((len(models), tcount), dtype=np.int64)
+        faulty = np.zeros((len(models), snaps, tcount), dtype=np.int64)
+        placed = np.zeros((len(models), snaps, tcount), dtype=np.int64)
+        chunk_snapshots = max(1, chunk_snapshots)  # same clamp as the jax path
+        for lo in range(0, max(snaps, 1), chunk_snapshots):
+            chunk = masks[lo:lo + chunk_snapshots]
+            if not chunk.shape[0]:
+                break
+            with obs.span("sim.numpy.eval_chunk", rows=chunk.shape[0]):
+                for ai, model in enumerate(models):
+                    grid = model.evaluate_batch(chunk, tp_sizes)
+                    total[ai] = grid.total_gpus
+                    faulty[ai, lo:lo + chunk.shape[0]] = grid.faulty_gpus
+                    placed[ai, lo:lo + chunk.shape[0]] = grid.placed_gpus
     return total, faulty, placed, "numpy"
 
 
 def evaluate_mask_stream(models: Sequence[HBDModel], tp_sizes: Sequence[int],
                          chunks: Iterable[np.ndarray], total_snapshots: int,
                          *, chunk_snapshots: int = 1024,
-                         backend: str = "auto"
+                         backend: str = "auto",
+                         progress: Optional[Callable[[Progress], None]] = None
                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, str]:
     """Evaluate a *stream* of mask chunks in bounded memory.
 
@@ -171,6 +179,12 @@ def evaluate_mask_stream(models: Sequence[HBDModel], tp_sizes: Sequence[int],
     stream never exists as a 10 GB host matrix.  On the JAX backend each
     block flows through the same jit-cached, donated device buffers as the
     batched path (``repro.sim.jax_backend.GridEvaluator``).
+
+    ``progress`` is called once per evaluated block with a
+    :class:`repro.obs.Progress` (blocks done, snapshots/sec, ETA); the
+    default publishes the same numbers as telemetry gauges under
+    ``sim.stream.*`` -- a no-op unless telemetry is enabled -- so
+    multi-minute streaming runs are never silent.
     """
     chosen = resolve_backend(backend, models)
     tp_sizes = list(tp_sizes)
@@ -182,6 +196,7 @@ def evaluate_mask_stream(models: Sequence[HBDModel], tp_sizes: Sequence[int],
     state = {"lo": 0}
     pending: List[np.ndarray] = []
     pending_rows = 0
+    tracker = StreamProgress(total_snapshots, progress, prefix="sim.stream")
 
     def flush() -> None:
         if not pending:
@@ -189,24 +204,29 @@ def evaluate_mask_stream(models: Sequence[HBDModel], tp_sizes: Sequence[int],
         block = pending[0] if len(pending) == 1 else np.concatenate(pending)
         del pending[:]
         lo = state["lo"]
-        t, f, p, _ = evaluate_masks(models, tp_sizes, block,
-                                    chunk_snapshots=chunk_snapshots,
-                                    backend=chosen)
+        with obs.span("sim.stream.block", rows=block.shape[0], offset=lo,
+                      backend=chosen):
+            t, f, p, _ = evaluate_masks(models, tp_sizes, block,
+                                        chunk_snapshots=chunk_snapshots,
+                                        backend=chosen)
         total[:] = t
         faulty[:, lo:lo + block.shape[0]] = f
         placed[:, lo:lo + block.shape[0]] = p
         state["lo"] = lo + block.shape[0]
+        tracker.update(block.shape[0])
 
-    for chunk in chunks:
-        chunk = np.asarray(chunk, dtype=bool)
-        if not chunk.shape[0]:
-            continue
-        pending.append(chunk)
-        pending_rows += chunk.shape[0]
-        if pending_rows >= chunk_snapshots:
-            flush()
-            pending_rows = 0
-    flush()
+    with obs.span("sim.evaluate_mask_stream", backend=chosen,
+                  snapshots=total_snapshots):
+        for chunk in chunks:
+            chunk = np.asarray(chunk, dtype=bool)
+            if not chunk.shape[0]:
+                continue
+            pending.append(chunk)
+            pending_rows += chunk.shape[0]
+            if pending_rows >= chunk_snapshots:
+                flush()
+                pending_rows = 0
+        flush()
     if state["lo"] != total_snapshots:
         raise ValueError(f"mask stream yielded {state['lo']} snapshots, "
                          f"expected {total_snapshots}")
@@ -230,44 +250,48 @@ def run_sweep(spec: ScenarioSpec, *, masks: Optional[np.ndarray] = None,
     tps = np.asarray(spec.tp_sizes, dtype=np.int64)
     chosen = resolve_backend(backend, models)
 
-    if chosen == "jax" and masks is None \
-            and isinstance(spec.snapshots, CounterIIDSnapshots):
-        from . import jax_backend
-        if jax_backend.device_draws_canonical():
-            # counter-based spec: draw the masks on device with jax.random
-            # (bit-identical to the host mirror, no host matrix needed)
-            gen = jax_backend.MaskGen(spec.snapshots.samples, spec.num_nodes,
-                                      spec.snapshots.fault_ratio,
-                                      spec.snapshots.seed)
-            total, faulty, placed = jax_backend.sweep_grids(
-                models, spec.tp_sizes, gen=gen,
-                chunk_snapshots=chunk_snapshots)
-            return SweepResult(spec, names, tps, total, faulty, placed,
-                               backend="jax")
+    with obs.span("sim.run_sweep", backend=chosen, nodes=spec.num_nodes,
+                  models=len(models)):
+        if chosen == "jax" and masks is None \
+                and isinstance(spec.snapshots, CounterIIDSnapshots):
+            from . import jax_backend
+            if jax_backend.device_draws_canonical():
+                # counter-based spec: draw the masks on device with
+                # jax.random (bit-identical to the host mirror, no host
+                # matrix needed)
+                gen = jax_backend.MaskGen(spec.snapshots.samples,
+                                          spec.num_nodes,
+                                          spec.snapshots.fault_ratio,
+                                          spec.snapshots.seed)
+                total, faulty, placed = jax_backend.sweep_grids(
+                    models, spec.tp_sizes, gen=gen,
+                    chunk_snapshots=chunk_snapshots)
+                return SweepResult(spec, names, tps, total, faulty, placed,
+                                   backend="jax")
 
-    if masks is None:
-        if isinstance(spec.snapshots, CounterIIDSnapshots):
-            # counter streams regenerate any row range bit-identically from
-            # a start offset, so stream the masks chunk by chunk -- a
-            # million-snapshot spec never materializes the full host matrix
-            # on either backend
-            sn = spec.snapshots
-            step = max(1, chunk_snapshots)
-            chunks = (counter_fault_masks(spec.num_nodes, sn.fault_ratio,
-                                          min(step, sn.samples - off),
-                                          sn.seed, start=off)
-                      for off in range(0, sn.samples, step))
-            total, faulty, placed, chosen = evaluate_mask_stream(
-                models, spec.tp_sizes, chunks, sn.samples,
-                chunk_snapshots=chunk_snapshots, backend=chosen)
-            return SweepResult(spec, names, tps, total, faulty, placed,
-                               backend=chosen)
-        masks = spec.snapshots.masks(spec.num_nodes)
-    total, faulty, placed, chosen = evaluate_masks(
-        models, spec.tp_sizes, masks, chunk_snapshots=chunk_snapshots,
-        backend=chosen)
-    return SweepResult(spec, names, tps, total, faulty, placed,
-                       backend=chosen)
+        if masks is None:
+            if isinstance(spec.snapshots, CounterIIDSnapshots):
+                # counter streams regenerate any row range bit-identically
+                # from a start offset, so stream the masks chunk by chunk --
+                # a million-snapshot spec never materializes the full host
+                # matrix on either backend
+                sn = spec.snapshots
+                step = max(1, chunk_snapshots)
+                chunks = (counter_fault_masks(spec.num_nodes, sn.fault_ratio,
+                                              min(step, sn.samples - off),
+                                              sn.seed, start=off)
+                          for off in range(0, sn.samples, step))
+                total, faulty, placed, chosen = evaluate_mask_stream(
+                    models, spec.tp_sizes, chunks, sn.samples,
+                    chunk_snapshots=chunk_snapshots, backend=chosen)
+                return SweepResult(spec, names, tps, total, faulty, placed,
+                                   backend=chosen)
+            masks = spec.snapshots.masks(spec.num_nodes)
+        total, faulty, placed, chosen = evaluate_masks(
+            models, spec.tp_sizes, masks, chunk_snapshots=chunk_snapshots,
+            backend=chosen)
+        return SweepResult(spec, names, tps, total, faulty, placed,
+                           backend=chosen)
 
 
 def run_sweep_scalar(spec: ScenarioSpec, *,

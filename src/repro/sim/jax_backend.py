@@ -25,6 +25,7 @@ Guarantees (enforced by ``tests/test_jax_backend.py``):
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from typing import Callable, Dict, Optional, Sequence, Tuple, Type
 
@@ -42,6 +43,7 @@ except Exception as e:  # pragma: no cover - exercised on jax-free installs
     HAVE_JAX = False
     _IMPORT_ERROR = e
 
+from .. import obs
 from ..core import prng as cprng
 from ..core.hbd_models import (BigSwitch, HBDModel, InfiniteHBDModel,
                                NVLModel, SiPRingModel, TPUv4Model)
@@ -314,7 +316,9 @@ def _grid_fn(models: Sequence[HBDModel], tps: Sequence[int], mesh,
                                      gen.seed))
     fn = _GRID_CACHE.get(key)
     if fn is not None:
+        obs.count("sim.jax.jit_cache_hit")
         return fn
+    obs.count("sim.jax.jit_cache_miss")
 
     kernels = [_builder_for(m)(m, tps) for m in models]
 
@@ -386,26 +390,36 @@ class GridEvaluator:
         device-count multiple and the pad rows discarded.
         """
         rows = block.shape[0]
-        padded = -(-rows // self.ndev) * self.ndev
-        if padded != rows:                     # pad the tail chunk only
-            if self.gen is None:
-                block = np.concatenate(
-                    [block, np.zeros((padded - rows, self.width), bool)])
-            else:
-                block = np.concatenate(
-                    [block, block[-1] + 1
-                     + np.arange(padded - rows, dtype=np.int32)])
-        # one transfer straight into the sharded layout (device_put from
-        # host numpy) -- no intermediate full copy on the default device
-        arg = (jnp.asarray(block) if self.sharding is None
-               else jax.device_put(block, self.sharding))
-        with warnings.catch_warnings():
-            # bool/int32 donation can't alias int32 outputs; the donation
-            # still releases the chunk buffer eagerly, which is the point
-            warnings.filterwarnings("ignore", message=".*onat.*buffer.*")
-            out = np.asarray(self.fn(arg))     # (padded, A, 2, T)
-        return (out[:rows, :, 0].transpose(1, 0, 2).astype(np.int64),
-                out[:rows, :, 1].transpose(1, 0, 2).astype(np.int64))
+        with obs.span("sim.jax.eval_block", rows=rows,
+                      devices=self.ndev) as sp:
+            padded = -(-rows // self.ndev) * self.ndev
+            if padded != rows:                 # pad the tail chunk only
+                if self.gen is None:
+                    block = np.concatenate(
+                        [block, np.zeros((padded - rows, self.width), bool)])
+                else:
+                    block = np.concatenate(
+                        [block, block[-1] + 1
+                         + np.arange(padded - rows, dtype=np.int32)])
+            # one transfer straight into the sharded layout (device_put from
+            # host numpy) -- no intermediate full copy on the default device
+            arg = (jnp.asarray(block) if self.sharding is None
+                   else jax.device_put(block, self.sharding))
+            t0 = time.perf_counter()
+            with warnings.catch_warnings():
+                # bool/int32 donation can't alias int32 outputs; the
+                # donation still releases the chunk buffer eagerly, which
+                # is the point
+                warnings.filterwarnings("ignore", message=".*onat.*buffer.*")
+                out = np.asarray(self.fn(arg))     # (padded, A, 2, T)
+            elapsed = time.perf_counter() - t0
+            obs.count("sim.jax.donated_blocks")
+            if elapsed > 0:
+                rate = rows / elapsed
+                sp.set(snaps_per_sec=round(rate, 1))
+                obs.gauge("sim.jax.snaps_per_sec", rate)
+            return (out[:rows, :, 0].transpose(1, 0, 2).astype(np.int64),
+                    out[:rows, :, 1].transpose(1, 0, 2).astype(np.int64))
 
 
 def sweep_grids(models: Sequence[HBDModel], tps: Sequence[int], *,

@@ -14,6 +14,7 @@ from __future__ import annotations
 import io
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from .. import obs
 from ..core.reductions import (percentile_capacity, waiting_share,
                                waste_stats)
 from .engine import SweepResult
@@ -120,74 +121,90 @@ def comparison_matrix(num_nodes: int = 512, *,
     specs = [arch.get(a) for a in arches]
     fault_ratios = tuple(float(r) for r in fault_ratios)
 
-    # 1. waste grids, one scenario sweep per fault-ratio row
-    sweeps = [run_sweep(ScenarioSpec(
-        num_nodes=num_nodes,
-        snapshots=CounterIIDSnapshots(ratio, samples=samples, seed=seed + ri),
-        tp_sizes=(tp,), architectures=arches, gpus_per_node=gpus_per_node),
-        backend=backend) for ri, ratio in enumerate(fault_ratios)]
+    matrix_span = obs.span("sim.comparison_matrix",
+                           architectures=len(arches),
+                           ratios=len(fault_ratios))
+    with matrix_span:
+        # 1. waste grids, one scenario sweep per fault-ratio row
+        with obs.span("matrix.waste_sweeps", ratios=len(fault_ratios)):
+            sweeps = [run_sweep(ScenarioSpec(
+                num_nodes=num_nodes,
+                snapshots=CounterIIDSnapshots(ratio, samples=samples,
+                                              seed=seed + ri),
+                tp_sizes=(tp,), architectures=arches,
+                gpus_per_node=gpus_per_node),
+                backend=backend) for ri, ratio in enumerate(fault_ratios)]
 
-    # 2. cross-ToR shares of every placement variant the suite maps to,
-    #    over the same counter-threefry mask rows
-    variants: List[str] = []
-    for a in arches:
-        v = variant_for(a)
-        if v is not None and v not in variants:
-            variants.append(v)
-    shares: Dict[Tuple[str, float], Optional[float]] = {}
-    if variants:
-        dres = run_dcn_sweep(DcnSpec(
-            num_nodes=num_nodes, fault_ratios=fault_ratios, samples=samples,
-            seed=seed, tp_sizes=(tp,), variants=tuple(variants),
-            gpus_per_node=gpus_per_node, **(dcn_kwargs or {})),
-            backend=backend)
-        for r in traffic_tables(dres, dp_bytes=dp_bytes, tp_bytes=tp_bytes):
-            shares[(r["variant"], r["fault_ratio"])] = \
-                r["mean_cross_tor_share"]
+        # 2. cross-ToR shares of every placement variant the suite maps
+        #    to, over the same counter-threefry mask rows
+        variants: List[str] = []
+        for a in arches:
+            v = variant_for(a)
+            if v is not None and v not in variants:
+                variants.append(v)
+        shares: Dict[Tuple[str, float], Optional[float]] = {}
+        if variants:
+            with obs.span("matrix.dcn_shares", variants=len(variants)):
+                dres = run_dcn_sweep(DcnSpec(
+                    num_nodes=num_nodes, fault_ratios=fault_ratios,
+                    samples=samples, seed=seed, tp_sizes=(tp,),
+                    variants=tuple(variants), gpus_per_node=gpus_per_node,
+                    **(dcn_kwargs or {})),
+                    backend=backend)
+                for r in traffic_tables(dres, dp_bytes=dp_bytes,
+                                        tp_bytes=tp_bytes):
+                    shares[(r["variant"], r["fault_ratio"])] = \
+                        r["mean_cross_tor_share"]
 
-    # 3. delivered-MFU economics: elastic power-of-two DP per snapshot,
-    #    one MFU search per distinct DP degree (shared across the suite)
-    if sim_model is None:
-        from ..core.mfu_sim import LLAMA31_405B
-        sim_model = LLAMA31_405B
-    mfu_cache: Dict[int, Optional[object]] = {}
+        # 3. delivered-MFU economics: elastic power-of-two DP per
+        #    snapshot, one MFU search per distinct DP degree (shared
+        #    across the suite)
+        if sim_model is None:
+            from ..core.mfu_sim import LLAMA31_405B
+            sim_model = LLAMA31_405B
+        mfu_cache: Dict[int, Optional[object]] = {}
 
-    def cluster_mfu(dp: int, total: int) -> float:
-        if dp < 1 or total <= 0:
-            return 0.0
-        if dp not in mfu_cache:
-            mfu_cache[dp] = elastic_mfu(sim_model, tp, dp,
-                                        global_batch=global_batch,
-                                        cluster_kwargs=cluster_kwargs)
-        res = mfu_cache[dp]
-        return res.mfu * (tp * dp) / total if res else 0.0
+        def cluster_mfu(dp: int, total: int) -> float:
+            if dp < 1 or total <= 0:
+                return 0.0
+            if dp not in mfu_cache:
+                mfu_cache[dp] = elastic_mfu(sim_model, tp, dp,
+                                            global_batch=global_batch,
+                                            cluster_kwargs=cluster_kwargs)
+            res = mfu_cache[dp]
+            return res.mfu * (tp * dp) / total if res else 0.0
 
-    rows = []
-    for ai, (name, spec) in enumerate(zip(arches, specs)):
-        variant = variant_for(name)
-        for ri, ratio in enumerate(fault_ratios):
-            res = sweeps[ri]
-            total = int(res.total_gpus[ai, 0])
-            waste = float(res.waste_ratio[ai, :, 0].mean())
-            placed = res.placed_gpus[ai, :, 0]
-            dps = [min(int(d), max_dp) for d in pow2_floor(placed // tp)]
-            mean_mfu = float(sum(cluster_mfu(d, total)
-                                 for d in dps) / max(len(dps), 1))
-            if spec.bom is not None and mean_mfu > 0 and total > 0:
-                capex = (GPU_UNIT_COST + spec.bom.per_gpu_cost) * total
-                usd_per_mfu_gpu_h = capex / (mean_mfu * total * amortize_h)
-            else:
-                usd_per_mfu_gpu_h = None
-            rows.append({
-                "architecture": name, "paper": spec.paper,
-                "fault_ratio": ratio, "tp_size": int(tp),
-                "waste_ratio": waste,
-                "cross_tor_share": (shares.get((variant, ratio))
-                                    if variant is not None else None),
-                "mean_mfu": mean_mfu,
-                "usd_per_mfu_gpu_h": usd_per_mfu_gpu_h,
-                "priced": spec.bom is not None,
-            })
+        rows = []
+        with obs.span("matrix.mfu_economics", architectures=len(arches)):
+            for ai, (name, spec) in enumerate(zip(arches, specs)):
+                variant = variant_for(name)
+                for ri, ratio in enumerate(fault_ratios):
+                    res = sweeps[ri]
+                    total = int(res.total_gpus[ai, 0])
+                    waste = float(res.waste_ratio[ai, :, 0].mean())
+                    placed = res.placed_gpus[ai, :, 0]
+                    dps = [min(int(d), max_dp)
+                           for d in pow2_floor(placed // tp)]
+                    mean_mfu = float(sum(cluster_mfu(d, total)
+                                         for d in dps) / max(len(dps), 1))
+                    if spec.bom is not None and mean_mfu > 0 and total > 0:
+                        capex = (GPU_UNIT_COST
+                                 + spec.bom.per_gpu_cost) * total
+                        usd_per_mfu_gpu_h = capex / (mean_mfu * total
+                                                     * amortize_h)
+                    else:
+                        usd_per_mfu_gpu_h = None
+                    rows.append({
+                        "architecture": name, "paper": spec.paper,
+                        "fault_ratio": ratio, "tp_size": int(tp),
+                        "waste_ratio": waste,
+                        "cross_tor_share": (shares.get((variant, ratio))
+                                            if variant is not None
+                                            else None),
+                        "mean_mfu": mean_mfu,
+                        "usd_per_mfu_gpu_h": usd_per_mfu_gpu_h,
+                        "priced": spec.bom is not None,
+                    })
     return rows
 
 

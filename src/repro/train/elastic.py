@@ -77,12 +77,23 @@ class ElasticRunner:
 
     def run(self, total_steps: int,
             fault_schedule: Optional[Dict[int, Set[int]]] = None,
-            repair_schedule: Optional[Dict[int, Set[int]]] = None):
-        """Run ``total_steps``, applying faults at the scheduled steps."""
+            repair_schedule: Optional[Dict[int, Set[int]]] = None,
+            straggler_schedule: Optional[Dict[int, Dict[int, float]]] = None):
+        """Run ``total_steps``, applying faults at the scheduled steps.
+
+        ``straggler_schedule`` maps a step to that step's observed per-node
+        step times (``{node: seconds}`` -- in production, the per-rank
+        timings the heartbeats carry).  The times are fed to
+        ``ClusterManager.flag_stragglers``; nodes exceeding
+        ``straggler_threshold`` x median are treated exactly like faults at
+        that step (ring rebuild + checkpoint restore), per the paper's
+        straggler-mitigation path.
+        """
         # copy: events fire exactly once (a rollback past the fault step
         # must not re-trigger the same fault)
         fault_schedule = dict(fault_schedule or {})
         repair_schedule = dict(repair_schedule or {})
+        straggler_schedule = dict(straggler_schedule or {})
         dp = self.cfg.dp_size
         mesh, plan, _ = self._mesh_for(dp)
         state, step_fn, data = self.build_step(mesh, plan, dp)
@@ -93,12 +104,23 @@ class ElasticRunner:
             if step in repair_schedule:
                 self.cm.on_repair(time.time(), repair_schedule.pop(step),
                                   self.cfg.tp_size, dp, self.cfg.pod_size)
+            fault_nodes: Set[int] = set()
             if step in fault_schedule:
+                fault_nodes |= set(fault_schedule.pop(step))
+            if step in straggler_schedule:
+                flagged = self.cm.flag_stragglers(
+                    straggler_schedule.pop(step),
+                    self.cfg.straggler_threshold)
+                flagged -= self.cm.physical_faults
+                if flagged:
+                    self.events.append(("straggler", step,
+                                        tuple(sorted(flagged))))
+                    fault_nodes |= flagged
+            if fault_nodes:
                 # 1) mark faults + reconfigure rings (control plane)
                 saver.wait()
                 try:
-                    ev = self.cm.on_fault(time.time(),
-                                          fault_schedule.pop(step),
+                    ev = self.cm.on_fault(time.time(), fault_nodes,
                                           self.cfg.tp_size, dp,
                                           self.cfg.pod_size)
                     new_dp = ev.plan.device_grid.shape[-2]

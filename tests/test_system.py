@@ -87,3 +87,60 @@ def test_straggler_flagging():
     times[7] = 2.5
     flagged = cm.flag_stragglers(times, threshold=1.5)
     assert flagged == {7}
+
+
+def test_elastic_straggler_schedule_triggers_rebuild():
+    """A straggling node reported via per-step timings is swapped out
+    exactly like a fault: flagged -> ring rebuild -> run completes."""
+    from repro.train.elastic import ElasticConfig, ElasticRunner
+
+    cfg = get_arch("h2o-danube-1.8b").reduced()
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=2))
+
+    def build_step(mesh, plan, dp):
+        state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, tcfg))
+        data = data_iter(cfg, batch=2, seq=16)
+        return state, step, data
+
+    times = {i: 1.0 for i in range(8)}
+    times[5] = 3.0                       # node 5 straggles at step 4
+    with tempfile.TemporaryDirectory() as d:
+        ecfg = ElasticConfig(num_nodes=64, gpus_per_node=4, tp_size=16,
+                             dp_size=14, checkpoint_every=3)
+        runner = ElasticRunner(ecfg, d, build_step)
+        state, losses = runner.run(
+            total_steps=10, straggler_schedule={4: times})
+        sev = [e for e in runner.events if e[0] == "straggler"]
+        assert sev == [("straggler", 4, (5,))]
+        # the flagged node rides the fault path: one reconfiguration fired
+        assert len([e for e in runner.events if e[0] == "fault"]) == 1
+        assert 5 in runner.cm.physical_faults
+        assert len(losses) >= 10
+
+
+def test_elastic_straggler_already_faulty_not_reflagged():
+    """Times from a node already marked faulty must not re-trigger a
+    rebuild (flag_stragglers output minus physical_faults)."""
+    from repro.train.elastic import ElasticConfig, ElasticRunner
+
+    cfg = get_arch("h2o-danube-1.8b").reduced()
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=2))
+
+    def build_step(mesh, plan, dp):
+        state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, tcfg))
+        data = data_iter(cfg, batch=2, seq=16)
+        return state, step, data
+
+    slow = {i: 1.0 for i in range(8)}
+    slow[3] = 9.0
+    with tempfile.TemporaryDirectory() as d:
+        ecfg = ElasticConfig(num_nodes=64, gpus_per_node=4, tp_size=16,
+                             dp_size=14, checkpoint_every=3)
+        runner = ElasticRunner(ecfg, d, build_step)
+        runner.run(total_steps=8, fault_schedule={2: {3}},
+                   straggler_schedule={5: slow})
+        # node 3 was already a physical fault at step 5: no straggler event
+        assert [e for e in runner.events if e[0] == "straggler"] == []
+        assert len([e for e in runner.events if e[0] == "fault"]) == 1

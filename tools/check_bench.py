@@ -42,22 +42,59 @@ ROOT = Path(__file__).resolve().parent.parent
 #: deliberate, so a baseline's schema is reviewed once, in this file.
 REQUIRED_KEYS = {
     "sweep": {"smoke", "snapshots", "architectures", "numpy_s", "scalar_s",
-              "jax_s", "devices"},
+              "jax_s", "devices", "telemetry"},
     "churn": {"smoke", "traces", "architectures", "num_nodes", "scalar_s",
-              "numpy_s", "bit_exact"},
+              "numpy_s", "bit_exact", "telemetry"},
     "dcn": {"smoke", "num_nodes", "samples", "fault_ratios", "scalar_s",
             "numpy_s", "bit_exact_vs_scalar_rows", "curve_orchestrated",
-            "near_zero_frontier"},
+            "near_zero_frontier", "telemetry"},
     "cost": {"smoke", "samples", "fault_ratios", "architectures",
              "table6_per_gpu_usd", "headline_ratios", "fig17d_musd_tp32",
-             "bit_exact_vs_scalar_rows"},
+             "bit_exact_vs_scalar_rows", "telemetry"},
     "matrix": {"smoke", "num_nodes", "architectures", "fault_ratios",
-               "backends", "bit_exact_backends", "rows"},
+               "backends", "bit_exact_backends", "rows", "telemetry"},
     "scale": {"smoke", "snapshots", "num_nodes", "architectures", "backends",
               "gate_floors_snaps_per_sec", "numpy_snaps_per_sec",
               "overlap_snapshots", "stream_equal", "full_snaps_per_sec",
-              "peak_rss_mb", "churn_stream_equal", "runtime"},
+              "peak_rss_mb", "churn_stream_equal", "runtime", "telemetry"},
 }
+
+#: Shape of the ``telemetry`` block ``benchmarks.common.write_json`` stamps
+#: (``repro.obs.Telemetry.summary()``): top-level sections plus the per-span
+#: aggregate fields.
+TELEMETRY_KEYS = {"enabled", "spans", "counters", "gauges"}
+TELEMETRY_SPAN_KEYS = {"count", "total_s", "self_s"}
+
+
+def check_telemetry(section: str, payload: dict) -> list:
+    """Validate the payload's telemetry block: summary shape, span rows,
+    and that a full-mode run actually collected spans (an empty block
+    means pin_runtime()'s enable was bypassed)."""
+    problems = []
+    tel = payload.get("telemetry")
+    if not isinstance(tel, dict):
+        return [f"{section}: telemetry block missing or not an object"]
+    missing = sorted(TELEMETRY_KEYS - set(tel))
+    if missing:
+        return [f"{section}: telemetry block is missing {missing}"]
+    if tel.get("enabled") is not True:
+        problems.append(
+            f"{section}: telemetry.enabled={tel.get('enabled')!r}; "
+            f"baseline runs must collect telemetry (pin_runtime enables it)")
+    spans = tel.get("spans")
+    if not isinstance(spans, dict) or not spans:
+        problems.append(
+            f"{section}: telemetry.spans is empty -- the engines' "
+            f"instrumentation did not run")
+        return problems
+    for name, row in spans.items():
+        if not isinstance(row, dict) \
+                or not TELEMETRY_SPAN_KEYS <= set(row):
+            problems.append(
+                f"{section}: telemetry.spans[{name!r}] must carry "
+                f"{sorted(TELEMETRY_SPAN_KEYS)}")
+            break
+    return problems
 
 WRITE_JSON_RE = re.compile(r"""write_json\(\s*["']([A-Za-z0-9_]+)["']""")
 
@@ -121,6 +158,8 @@ def check_section(section: str, source: str) -> list:
             problems.append(
                 f"{section}: {path.name} is missing required keys: "
                 f"{missing}")
+        elif "telemetry" in required:
+            problems.extend(check_telemetry(section, payload))
     # staleness: a baseline committed before the benchmark script's last
     # change was measured against a different gate/grid
     baseline_ct = _commit_time(path.name)

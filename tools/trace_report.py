@@ -1,0 +1,181 @@
+#!/usr/bin/env python
+"""Summarize a ``repro.obs`` Chrome-trace JSON file.
+
+Reads the Perfetto-loadable trace that ``REPRO_TRACE=1`` (or
+``repro.obs.export``) produces and prints three views:
+
+  * **top spans by self-time** -- per span name: call count, total wall
+    time, and self time (duration minus child spans), recomputed from the
+    trace's event nesting (same ts/dur containment a Perfetto flame chart
+    shows) so the report validates the file's structure rather than
+    trusting the embedded ``self_us`` args;
+  * **counter totals** -- final cumulative value of every counter track;
+  * **rate timeline** -- for one counter (default
+    ``sim.snapshots_evaluated``), per-bucket deltas as an events/sec
+    timeline, e.g. snapshots/sec over the run.
+
+Importable for tests: :func:`load_trace`, :func:`span_summary`,
+:func:`counter_totals`, :func:`rate_timeline`.  Run from anywhere::
+
+    python tools/trace_report.py repro.trace.json
+    python tools/trace_report.py repro.trace.json --top 30 \\
+        --rate prng.masks_generated --buckets 20
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+
+def load_trace(path: str) -> dict:
+    """Load a Chrome-trace JSON file; validates the basic envelope."""
+    with open(path) as f:
+        trace = json.load(f)
+    if not isinstance(trace, dict) or "traceEvents" not in trace:
+        raise ValueError(f"{path}: not a Chrome-trace JSON object "
+                         "(no traceEvents)")
+    return trace
+
+
+def _complete_events(trace: dict) -> List[dict]:
+    return [e for e in trace["traceEvents"] if e.get("ph") == "X"]
+
+
+def span_summary(trace: dict) -> Dict[str, Dict[str, float]]:
+    """Per span name: ``{count, total_us, self_us}``, self-time recomputed
+    from ts/dur nesting per thread (children subtract from the innermost
+    enclosing span, exactly the live collector's accounting)."""
+    by_tid: Dict[Tuple, List[dict]] = defaultdict(list)
+    for e in _complete_events(trace):
+        by_tid[(e.get("pid"), e.get("tid"))].append(e)
+    agg: Dict[str, Dict[str, float]] = {}
+    for events in by_tid.values():
+        # sort by start asc, then duration desc: parents precede children
+        events.sort(key=lambda e: (e["ts"], -e["dur"]))
+        stack: List[dict] = []          # open spans, innermost last
+        for e in events:
+            end = e["ts"] + e["dur"]
+            while stack and e["ts"] >= stack[-1]["_end"] - 1e-9:
+                stack.pop()
+            if stack:
+                stack[-1]["_child"] += e["dur"]
+            e["_end"], e["_child"] = end, 0.0
+            stack.append(e)
+        for e in events:
+            row = agg.setdefault(e["name"],
+                                 {"count": 0, "total_us": 0.0,
+                                  "self_us": 0.0})
+            row["count"] += 1
+            row["total_us"] += e["dur"]
+            row["self_us"] += e["dur"] - e.pop("_child")
+            e.pop("_end", None)
+    return agg
+
+
+def counter_totals(trace: dict) -> Dict[str, float]:
+    """Final cumulative value per counter track (``ph:"C"``,
+    ``cat:"counter"``)."""
+    latest: Dict[str, Tuple[float, float]] = {}
+    for e in trace["traceEvents"]:
+        if e.get("ph") != "C" or e.get("cat") != "counter":
+            continue
+        value = next(iter(e.get("args", {}).values()), 0.0)
+        ts = e.get("ts", 0.0)
+        if e["name"] not in latest or ts >= latest[e["name"]][0]:
+            latest[e["name"]] = (ts, value)
+    return {name: v for name, (_, v) in sorted(latest.items())}
+
+
+def rate_timeline(trace: dict, counter: str,
+                  buckets: int = 10) -> List[Tuple[float, float]]:
+    """``(bucket_end_ms, events_per_sec)`` rows for one cumulative counter.
+
+    Buckets span first..last sample; each bucket's rate is the cumulative
+    delta across it divided by the bucket width -- e.g. snapshots/sec over
+    the run for ``sim.snapshots_evaluated``.
+    """
+    samples = [(e["ts"], next(iter(e["args"].values())))
+               for e in trace["traceEvents"]
+               if e.get("ph") == "C" and e.get("name") == counter]
+    if len(samples) < 2:
+        return []
+    samples.sort()
+    t0, t1 = samples[0][0], samples[-1][0]
+    width = max((t1 - t0) / buckets, 1e-9)
+    rows = []
+    prev_v = samples[0][1]
+    si = 1
+    for b in range(1, buckets + 1):
+        edge = t0 + b * width
+        v = prev_v
+        while si < len(samples) and samples[si][0] <= edge + 1e-9:
+            v = samples[si][1]
+            si += 1
+        rows.append((edge / 1e3, (v - prev_v) / (width / 1e6)))
+        prev_v = v
+    return rows
+
+
+def format_report(trace: dict, top: int = 20,
+                  rate_counter: Optional[str] = None,
+                  buckets: int = 10) -> str:
+    lines: List[str] = []
+    spans = span_summary(trace)
+    lines.append(f"{'span':<36} {'count':>7} {'total_ms':>10} "
+                 f"{'self_ms':>10}")
+    ranked = sorted(spans.items(), key=lambda kv: -kv[1]["self_us"])
+    for name, row in ranked[:top]:
+        lines.append(f"{name:<36} {row['count']:>7d} "
+                     f"{row['total_us'] / 1e3:>10.3f} "
+                     f"{row['self_us'] / 1e3:>10.3f}")
+    totals = counter_totals(trace)
+    if totals:
+        lines.append("")
+        lines.append(f"{'counter':<44} {'total':>12}")
+        for name, v in totals.items():
+            lines.append(f"{name:<44} {v:>12g}")
+    if rate_counter:
+        rows = rate_timeline(trace, rate_counter, buckets)
+        lines.append("")
+        if rows:
+            lines.append(f"{rate_counter} rate timeline")
+            lines.append(f"{'t_ms':>12} {'per_sec':>14}")
+            for t_ms, rate in rows:
+                lines.append(f"{t_ms:>12.3f} {rate:>14.1f}")
+        else:
+            lines.append(f"{rate_counter}: <2 samples, no timeline")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Summarize a repro.obs Chrome-trace JSON file")
+    ap.add_argument("trace", help="trace file (REPRO_TRACE=1 output)")
+    ap.add_argument("--top", type=int, default=20,
+                    help="span rows to print (by self time)")
+    ap.add_argument("--rate", default="sim.snapshots_evaluated",
+                    help="counter to render as a rate timeline "
+                         "('' disables)")
+    ap.add_argument("--buckets", type=int, default=10,
+                    help="rate-timeline bucket count")
+    args = ap.parse_args(argv)
+    try:
+        trace = load_trace(args.trace)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"trace_report: {e}", file=sys.stderr)
+        return 1
+    try:
+        print(format_report(trace, top=args.top,
+                            rate_counter=args.rate or None,
+                            buckets=args.buckets))
+    except BrokenPipeError:   # `trace_report ... | head` closed the pipe
+        sys.stderr.close()    # suppress the interpreter's epilogue warning
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
