@@ -27,7 +27,7 @@ import traceback
 
 SECTIONS = ("waste_ratio", "max_job", "fault_waiting", "sweep", "churn",
             "dcn", "mfu_tables", "orchestration", "cost", "matrix", "scale",
-            "collectives_bench", "kernels_bench", "roofline")
+            "serve", "collectives_bench", "kernels_bench", "roofline")
 
 
 def main() -> None:

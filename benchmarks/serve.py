@@ -1,0 +1,168 @@
+"""Serving engines head-to-head: the batched-SLO throughput claim.
+
+Drives production arrival streams (stationary Poisson plus a diurnal
+curve) against the per-interval capacity of one Appendix-A churn trace
+three ways -- the scalar event-by-event FIFO reference, the batched NumPy
+interval scan, and the JAX ``lax.scan`` backend -- asserts the
+``(stream x architecture x interval)`` grids are bit-for-bit identical,
+and reports requests/sec.  Engine time is read from the ``repro.obs``
+spans the engines emit (``slo.run_serve_scalar`` / ``slo.run_serve_sweep``
+open *after* the shared arrival/capacity precompute), so the speedup
+compares the serving scans themselves -- the same discipline as the churn
+benchmark's pre-generated traces.  Full mode replays a 200-node, 60-day
+trace and gates the batched NumPy engine at >= 10x the scalar engine
+throughput; it also re-checks the acceptance table (InfiniteHBD retains
+serving goodput under churn at least as well as every rival).  Smoke
+shrinks the trace for CI.
+
+Results are persisted as ``BENCH_serve.json``.  Standalone entry point::
+
+    python -m benchmarks.serve [--smoke] [--backend {numpy,jax,both}]
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import obs
+from repro.churn import ChurnJob, ChurnSpec, replay_trace
+from repro.slo import (DiurnalArrivals, PoissonArrivals, ServeSpec,
+                       run_serve_scalar, run_serve_sweep, slo_table)
+
+from .common import row, write_json
+
+SPEEDUP_GATE = 10.0
+ARCHES = ("big-switch", "infinitehbd-k2", "infinitehbd-k3", "nvl-72",
+          "tpuv4", "sip-ring")
+GRID_FIELDS = ("served", "served_cum", "gone_cum", "queue_depth")
+
+
+def _grids_equal(a, b) -> bool:
+    return all(np.array_equal(getattr(a, f), getattr(b, f))
+               for f in GRID_FIELDS)
+
+
+def _goodput_retention_ok(rows) -> bool:
+    """The acceptance ordering: InfiniteHBD serves >= every rival and <=
+    the idealized big switch, per arrival stream."""
+    by = {}
+    for r in rows:
+        by.setdefault(r["arrival"], {})[r["architecture"]] = r["served"]
+    for served in by.values():
+        for k in ("infinitehbd-k2", "infinitehbd-k3"):
+            if served[k] > served["big-switch"]:
+                return False
+            if any(served[k] < served[rival]
+                   for rival in ("nvl-72", "tpuv4", "sip-ring")):
+                return False
+    return True
+
+
+def _span_total(name: str) -> float:
+    """Cumulative seconds spent inside span ``name`` so far."""
+    return obs.summary().get("spans", {}).get(name, {}).get("total_s", 0.0)
+
+
+def run(smoke: bool = False, backend: str = "both"):
+    if not obs.enabled():
+        obs.enable()        # engine time is read from the engines' spans
+    nodes, days = (48, 30) if smoke else (200, 60)
+    cspec = ChurnSpec(trace_nodes=nodes, horizon_h=days * 24.0,
+                      tp_sizes=(16,), architectures=ARCHES, seed=1)
+    tl = replay_trace(cspec.trace(0), tp_sizes=cspec.tp_sizes,
+                      architectures=ARCHES, job=ChurnJob(tp_size=16))
+    # overload the fleet slightly (arrivals ~ fault-free capacity) so
+    # per-architecture placed-GPU differences surface as served deltas
+    rates = (20.0, 40.0) if smoke else (40.0, 80.0)
+    spec = ServeSpec(
+        timeline=tl,
+        arrivals=(PoissonArrivals(rates[0], seed=2, stream=0),
+                  PoissonArrivals(rates[1], seed=2, stream=1),
+                  DiurnalArrivals(0.75 * rates[1], seed=2, stream=2,
+                                  amplitude=0.5)),
+        tp=16, req_per_gpu_hour=0.05, slo_h=2.0, patience_h=12.0)
+    A, R = len(ARCHES), len(spec.arrivals)
+    payload = {"smoke": smoke, "num_nodes": cspec.num_nodes,
+               "horizon_h": tl.horizon_h, "intervals": tl.num_intervals,
+               "architectures": list(ARCHES),
+               "arrival_streams": [g.label for g in spec.arrivals]}
+
+    before = _span_total("slo.run_serve_scalar")
+    t0 = time.perf_counter()
+    ref = run_serve_scalar(spec)
+    scalar_wall_s = time.perf_counter() - t0
+    scalar_s = _span_total("slo.run_serve_scalar") - before
+    # every request is pushed through A independent FIFO queues
+    requests_total = int(ref.total_arrivals.sum())
+    scalar_rps = requests_total * A / scalar_s
+    payload.update(requests_total=requests_total,
+                   scalar_s=round(scalar_s, 4),
+                   scalar_wall_s=round(scalar_wall_s, 4),
+                   requests_per_sec_scalar=round(scalar_rps, 1))
+    row(f"serve_sweep/scalar/req{requests_total}/intervals"
+        f"{tl.num_intervals}", scalar_s * 1e6,
+        {"requests_per_sec": round(scalar_rps, 1)})
+
+    from repro.slo import jax_backend
+    if backend == "jax" and not jax_backend.HAVE_JAX:
+        raise RuntimeError("--backend jax requested but jax is unavailable")
+    legs = (["numpy"] if backend in ("numpy", "both") else []) \
+        + (["jax"] if backend in ("jax", "both")
+           and jax_backend.HAVE_JAX else [])
+    numpy_rps = None
+    for leg in legs:
+        run_serve_sweep(spec, backend=leg)      # warm (jit compile) pass
+        before = _span_total("slo.run_serve_sweep")
+        res = run_serve_sweep(spec, backend=leg)
+        leg_s = _span_total("slo.run_serve_sweep") - before
+        assert _grids_equal(ref, res), f"{leg} grids != scalar grids"
+        leg_rps = requests_total * A / leg_s
+        if leg == "numpy":
+            numpy_rps = leg_rps
+        payload.update({f"{leg}_s": round(leg_s, 4),
+                        f"requests_per_sec_{leg}": round(leg_rps, 1),
+                        f"speedup_{leg}_vs_scalar":
+                            round(leg_rps / scalar_rps, 2)})
+        row(f"serve_sweep/{leg}/req{requests_total}/intervals"
+            f"{tl.num_intervals}", leg_s * 1e6,
+            {"requests_per_sec": round(leg_rps, 1),
+             "speedup_vs_scalar": round(leg_rps / scalar_rps, 1),
+             "bit_exact": True})
+    payload["bit_exact"] = True
+
+    table = slo_table(ref)
+    payload["slo_table"] = table
+    payload["goodput_retention_ok"] = _goodput_retention_ok(table)
+
+    if not smoke:
+        assert payload["goodput_retention_ok"], \
+            "InfiniteHBD did not retain serving goodput vs a rival"
+        if numpy_rps is not None:
+            speedup = numpy_rps / scalar_rps
+            if speedup < SPEEDUP_GATE:
+                raise AssertionError(
+                    f"batched serving scan only {speedup:.1f}x the scalar "
+                    f"event-by-event throughput on {requests_total} "
+                    f"requests (acceptance: >={SPEEDUP_GATE:.0f}x)")
+    write_json("serve", payload)
+
+
+def main():
+    import argparse
+
+    from .common import pin_runtime
+    pin_runtime()   # enable telemetry before the engines run
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--smoke", action="store_true",
+                   help="CI-sized trace (no speedup gate)")
+    p.add_argument("--backend", choices=("numpy", "jax", "both"),
+                   default="both")
+    args = p.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, backend=args.backend)
+
+
+if __name__ == "__main__":
+    main()

@@ -112,6 +112,33 @@ class ChurnTimeline:
         return np.divide(self.goodput_gpu_hours(), denom,
                          out=np.zeros_like(denom), where=denom != 0)
 
+    # --------------------------------------------------- interval export
+
+    def reconfig_stall_h(self) -> np.ndarray:
+        """Per-interval control-plane stall, shape ``(B,)``, in hours.
+
+        Each feasible :class:`ReconfigRecord` charges its settle latency to
+        the interval containing its event time (clipped to the interval's
+        duration -- a replan can not stall longer than the interval it
+        happened in).  Records with ``latency_us=None`` (no feasible plan)
+        contribute nothing here: their capacity loss already lives in the
+        shrunken ``placed_gpus`` grid.  This is the serving bridge's
+        capacity hook: ``repro.slo`` subtracts the stall from every
+        interval's usable serving time.
+        """
+        stall = np.zeros(self.num_intervals, dtype=float)
+        if not self.reconfigs:
+            return stall
+        durations = self.durations_h
+        for rec in self.reconfigs:
+            if rec.latency_us is None:
+                continue
+            b = int(np.searchsorted(self.edges_h, rec.time_h,
+                                    side="right")) - 1
+            if 0 <= b < stall.size:
+                stall[b] += rec.latency_us / 3.6e9
+        return np.minimum(stall, durations)
+
 
 # ------------------------------------------------------------- reductions
 

@@ -6,17 +6,25 @@ token-by-token through ``decode_step`` at CPU-test scale; on hardware the
 prefill path runs ``forward`` + cache writes), then all active slots decode
 in lockstep one token per engine step -- the serving analogue of the
 paper's single-job HBD: one big ring, full bandwidth to every member.
+
+Capacity hook: :meth:`ServeEngine.set_capacity` shrinks/restores the usable
+slot count at runtime -- the token-level mirror of what ``repro.slo``
+models at datacenter scale (faults shrink the ring, elastic reconfiguration
+pauses slots, repairs restore them).  Paused slots keep their request and
+cache state frozen (their positions never advance, so the next decode
+rewrites the same cache line) and resume decoding when capacity returns.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.models import decode_step, init_cache
 
@@ -41,13 +49,24 @@ class ServeEngine:
         self.positions = np.zeros((max_batch,), np.int32)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.pending_tok = np.zeros((max_batch,), np.int32)
+        self.capacity = max_batch
         self._step = jax.jit(
             lambda c, t, p: decode_step(params, cfg, c, t, p))
+
+    # ---------------------------------------------------------- capacity
+
+    def set_capacity(self, active_slots: int) -> int:
+        """Pause/restore slots: only indices ``< active_slots`` admit and
+        decode.  Requests already sitting in a paused slot stay frozen (not
+        dropped) until the capacity comes back.  Returns the clamped value."""
+        self.capacity = max(0, min(int(active_slots), self.max_batch))
+        obs.gauge("serve.capacity_slots", self.capacity)
+        return self.capacity
 
     # ------------------------------------------------------------- admit
 
     def submit(self, req: Request) -> bool:
-        for i, slot in enumerate(self.slots):
+        for i, slot in enumerate(self.slots[:self.capacity]):
             if slot is None:
                 req.out = []
                 self.slots[i] = req
@@ -68,14 +87,21 @@ class ServeEngine:
     # -------------------------------------------------------------- step
 
     def step(self) -> int:
-        """One lockstep decode for all active slots; returns #active."""
-        active = [i for i, s in enumerate(self.slots) if s is not None]
+        """One lockstep decode for all active slots; returns #active.
+
+        Slots at indices ``>= capacity`` are paused: they are excluded from
+        the active count and their positions/pending token never advance
+        (the jitted decode still runs the full batch, but a paused lane
+        rewrites the same cache line with the same token, a no-op)."""
+        active = [i for i, s in enumerate(self.slots)
+                  if s is not None and i < self.capacity]
         if not active:
             return 0
         nxt, self.cache = self._step(
             self.cache, jnp.asarray(self.pending_tok)[:, None],
             jnp.asarray(self.positions))
         nxt = np.asarray(nxt)
+        done = 0
         for i in active:
             req = self.slots[i]
             self.positions[i] += 1
@@ -85,9 +111,24 @@ class ServeEngine:
                     self.positions[i] >= self.max_len - 1:
                 req.done = True
                 self.slots[i] = None
+                done += 1
+        if done:
+            obs.count("serve.requests_completed", done)
         return len(active)
 
-    def run_until_done(self, max_steps: int = 512) -> None:
+    def run_until_done(self, max_steps: int = 512) -> List[Request]:
+        """Step until every *unpaused* slot drains, or ``max_steps``.
+
+        Returns the requests still resident afterwards (hit the step
+        budget, or parked in slots paused by :meth:`set_capacity`) instead
+        of silently dropping them; the caller decides whether to resume,
+        resubmit, or abandon them.  Leftovers are counted on the
+        ``serve.unfinished_requests`` telemetry counter.
+        """
         for _ in range(max_steps):
             if self.step() == 0:
                 break
+        leftover = [r for r in self.slots if r is not None]
+        if leftover:
+            obs.count("serve.unfinished_requests", len(leftover))
+        return leftover

@@ -28,6 +28,10 @@ from .tables import (comparison_matrix, fault_waiting_table, max_job_table,
 # re-exported here so traffic sweeps sit next to the waste sweeps.
 from ..dcn.engine import DcnSpec, run_dcn_sweep, variant_for
 from ..dcn.tables import traffic_tables
+# Serving axis: production traffic against the churn timeline
+# (repro.slo) -- same spec/sweep/reduction contract.
+from ..slo.engine import ServeSpec, run_serve_scalar, run_serve_sweep
+from ..slo.tables import slo_table, timeline_slo_table
 
 __all__ = [
     "SweepResult", "run_sweep", "run_sweep_scalar", "evaluate_masks",
@@ -37,4 +41,6 @@ __all__ = [
     "waste_table", "max_job_table", "fault_waiting_table", "to_csv",
     "comparison_matrix",
     "DcnSpec", "run_dcn_sweep", "traffic_tables", "variant_for",
+    "ServeSpec", "run_serve_sweep", "run_serve_scalar", "slo_table",
+    "timeline_slo_table",
 ]

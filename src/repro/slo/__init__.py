@@ -1,0 +1,25 @@
+"""Serving-under-churn: batched SLO engine over the fault timeline.
+
+Production traffic (``arrivals``) meets fault-shrunken capacity
+(``capacity``) in an integer-exact interval scan (``engine``), with
+latency/SLO/goodput/dollar reductions in ``tables``.  See
+``docs/ARCHITECTURE.md`` ("Serving under churn").
+"""
+
+from .arrivals import (DiurnalArrivals, MAX_MEAN, PoissonArrivals,
+                       counter_uniforms, poisson_counts)
+from .capacity import interval_capacity
+from .engine import (BACKENDS, ServeResult, ServeSpec, cohort_deadlines,
+                     expire_cumulative, resolve_backend, run_serve_scalar,
+                     run_serve_sweep)
+from .tables import (AMORTIZE_H, request_outcomes, slo_table,
+                     timeline_slo_table)
+
+__all__ = [
+    "AMORTIZE_H", "BACKENDS", "DiurnalArrivals", "MAX_MEAN",
+    "PoissonArrivals", "ServeResult", "ServeSpec", "cohort_deadlines",
+    "counter_uniforms", "expire_cumulative", "interval_capacity",
+    "poisson_counts", "request_outcomes", "resolve_backend",
+    "run_serve_scalar", "run_serve_sweep", "slo_table",
+    "timeline_slo_table",
+]

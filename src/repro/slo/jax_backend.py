@@ -1,0 +1,101 @@
+"""JAX compute backend for the serving scan (``lax.scan`` over intervals).
+
+The interval recurrence of ``repro.slo.engine`` is one integer state
+matrix ``G`` of shape ``(streams R, architectures A)`` advanced over the
+interval axis; here it runs as a jitted ``jax.lax.scan`` with the three
+host-precomputed int32 drivers (cumulative arrivals, capacity budgets,
+expiry floors) stacked on the scan axis.  All arithmetic is integer
+min/max/add, so the device grids are bit-for-bit the NumPy engine's
+(``tests/test_slo.py`` pins this on both backends).
+
+Device state is int32 -- the same width discipline as
+``repro.sim.jax_backend`` -- so total arrivals per stream must stay below
+``2**31``; :func:`serve_scan` guards the bound and the capacity driver is
+clipped to the arrival total (a budget beyond every outstanding request
+never binds), keeping huge GPU-hour budgets representable.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+try:  # keep repro.slo importable on numpy-only installs
+    import jax
+    import jax.numpy as jnp
+    HAVE_JAX = True
+    _IMPORT_ERROR: Optional[BaseException] = None
+except Exception as e:  # pragma: no cover - exercised on jax-free installs
+    HAVE_JAX = False
+    _IMPORT_ERROR = e
+
+from .. import obs
+
+_INT32_MAX = np.int64(2**31 - 1)
+
+
+def require() -> None:
+    if not HAVE_JAX:
+        raise RuntimeError(
+            f"backend='jax' requested but jax is unavailable "
+            f"({_IMPORT_ERROR!r})")
+
+
+def _scan_fn():
+    def step(G, xs):
+        joined, cap_s, exp_s = xs            # (R,), (A,), (R,)
+        k = jnp.minimum(joined[:, None] - G, cap_s[None, :])
+        served_cum = G + k
+        G_next = jnp.maximum(served_cum, exp_s[:, None])
+        queue = joined[:, None] - G_next
+        return G_next, (k, served_cum, G_next, queue)
+
+    def run(ca_t, cap_t, exp_t):             # drivers, scan axis leading
+        R = ca_t.shape[1]
+        A = cap_t.shape[1]
+        G0 = jnp.zeros((R, A), jnp.int32)
+        _, out = jax.lax.scan(step, G0, (ca_t, cap_t, exp_t))
+        return out
+    return jax.jit(run)
+
+
+_JITTED = None
+
+
+def serve_scan(ca: np.ndarray, cap: np.ndarray,
+               expire: np.ndarray) -> Tuple[np.ndarray, ...]:
+    """Run the serving scan on device; returns int64
+    ``(served, served_cum, gone_cum, queue)``, each ``(R, A, B)``."""
+    require()
+    ca = np.asarray(ca, np.int64)
+    cap = np.asarray(cap, np.int64)
+    expire = np.asarray(expire, np.int64)
+    total = ca[:, -1].max() if ca.size else 0
+    if total > _INT32_MAX:
+        raise OverflowError(
+            f"total arrivals per stream ({total}) exceed the device int32 "
+            "state; split the streams or use backend='numpy'")
+    # budgets beyond every outstanding request never bind: clip so
+    # GPU-hour-scale capacities stay int32-representable on device
+    cap32 = np.minimum(cap, total).astype(np.int32)
+    R, B = ca.shape
+    A = cap.shape[0]
+    if B == 0:
+        empty = np.zeros((R, A, 0), np.int64)
+        return empty, empty.copy(), empty.copy(), empty.copy()
+    global _JITTED
+    if _JITTED is None:
+        _JITTED = _scan_fn()
+    with obs.span("slo.jax.serve_scan", streams=R, arches=A,
+                  intervals=B):
+        out = _JITTED(jnp.asarray(ca.T.astype(np.int32)),
+                      jnp.asarray(cap32.T),
+                      jnp.asarray(expire.T.astype(np.int32)))
+        grids = tuple(np.asarray(v).transpose(1, 2, 0).astype(np.int64)
+                      for v in out)
+    obs.count("slo.jax.scans")
+    return grids
+
+
+__all__ = ["HAVE_JAX", "require", "serve_scan"]

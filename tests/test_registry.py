@@ -22,6 +22,7 @@ from repro.core.hbd_models import HBDModel
 EXPECTED_NAMES = (
     "big-switch", "infinitehbd-k2", "infinitehbd-k3", "nvl-36", "nvl-72",
     "nvl-576", "tpuv4", "sip-ring", "dgx-h100", "rail-only", "railx",
+    "ub-mesh",
 )
 
 AWKWARD_TPS = [4, 8, 16, 24, 32, 48, 64, 128]
@@ -39,7 +40,7 @@ def test_default_architectures_are_the_default_sweep_specs():
     assert arch.default_architectures() == EXPECTED_NAMES[:8]
     from repro.sim import DEFAULT_ARCHITECTURES
     assert DEFAULT_ARCHITECTURES == arch.default_architectures()
-    for name in ("dgx-h100", "rail-only", "railx"):
+    for name in ("dgx-h100", "rail-only", "railx", "ub-mesh"):
         assert not arch.get(name).default_sweep
 
 

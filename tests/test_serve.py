@@ -1,0 +1,122 @@
+"""Token-level serving engine: admission, completion, reuse, capacity.
+
+Exercises the previously untested ``repro.serve.ServeEngine`` paths --
+``submit`` rejection when the batch is full, per-step completion
+accounting, KV-slot reuse after a request drains -- plus the capacity
+hook and the ``run_until_done`` leftover contract the SLO subsystem
+relies on (unfinished requests are surfaced, never silently dropped).
+"""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.configs import get_arch
+from repro.models import init_params
+from repro.serve import Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("mixtral").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def make_engine(setup, **kw):
+    cfg, params = setup
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", 64)
+    return ServeEngine(cfg, params, **kw)
+
+
+def reqs(n, cfg, prompt_len=3, max_new=4, start=0):
+    rng = np.random.default_rng(7 + start)
+    return [Request(start + i,
+                    rng.integers(0, cfg.vocab_size, prompt_len).tolist(),
+                    max_new=max_new) for i in range(n)]
+
+
+def test_submit_rejects_when_batch_full(setup):
+    eng = make_engine(setup)
+    a, b, c = reqs(3, setup[0])
+    assert eng.submit(a) and eng.submit(b)
+    assert not eng.submit(c)                  # both slots taken
+    assert c.out is None                      # rejected request untouched
+    assert eng.slots == [a, b]
+
+
+def test_step_counts_active_and_completes_at_max_new(setup):
+    eng = make_engine(setup)
+    (a,) = reqs(1, setup[0], max_new=3)
+    eng.submit(a)
+    assert len(a.out) == 1                    # prefill emits token 0
+    assert eng.step() == 1                    # token 1
+    assert eng.step() == 1                    # token 2 -> done, slot freed
+    assert a.done and len(a.out) == 3
+    assert eng.slots[0] is None
+    assert eng.step() == 0                    # nothing left to decode
+
+
+def test_slot_reuse_after_completion(setup):
+    eng = make_engine(setup)
+    a, b = reqs(2, setup[0], max_new=2)
+    eng.submit(a)
+    eng.step()                                # a: 2nd token -> done
+    assert a.done and eng.slots[0] is None
+    assert eng.submit(b)                      # freed slot admits again
+    assert eng.slots[0] is b
+    leftover = eng.run_until_done()
+    assert leftover == [] and b.done
+    assert len(b.out) == 2
+    # a's output was not disturbed by b reusing its KV slot
+    assert len(a.out) == 2
+
+
+def test_max_len_forces_completion(setup):
+    eng = make_engine(setup, max_len=8)
+    (a,) = reqs(1, setup[0], prompt_len=3, max_new=100)
+    eng.submit(a)
+    assert eng.run_until_done() == []
+    assert a.done
+    assert len(a.out) < 100                   # cache bound, not max_new
+
+
+def test_run_until_done_surfaces_step_budget_leftovers(setup):
+    eng = make_engine(setup)
+    a, b = reqs(2, setup[0], max_new=50)
+    eng.submit(a)
+    eng.submit(b)
+    leftover = eng.run_until_done(max_steps=2)
+    assert leftover == [a, b]                 # surfaced, not dropped
+    assert not a.done and not b.done
+    # resuming finishes them
+    assert eng.run_until_done() == []
+    assert a.done and b.done
+
+
+def test_capacity_pause_freezes_and_resumes(setup):
+    eng = make_engine(setup)
+    a, b = reqs(2, setup[0], max_new=6)
+    eng.submit(a)
+    eng.submit(b)
+    assert eng.set_capacity(1) == 1
+    frozen = list(b.out)
+    assert eng.step() == 1                    # only slot 0 decodes
+    assert len(b.out) == len(frozen)          # paused lane is frozen
+    leftover = eng.run_until_done()
+    assert a.done and leftover == [b]         # parked request surfaced
+    assert b.out == frozen
+    eng.set_capacity(2)                       # repair: capacity returns
+    assert eng.run_until_done() == []
+    assert b.done and len(b.out) == 6
+
+
+def test_capacity_zero_blocks_admission(setup):
+    eng = make_engine(setup)
+    assert eng.set_capacity(0) == 0
+    (a,) = reqs(1, setup[0])
+    assert not eng.submit(a)
+    assert eng.set_capacity(99) == eng.max_batch      # clamped
+    assert eng.submit(a)

@@ -1,0 +1,84 @@
+"""UB-Mesh rival (arXiv 2503.20377): rack full-mesh waste semantics.
+
+The hybrid position in the zoo, pinned: inside a rack it pools like an
+island *without* hot spares (unlike NVL-36/72) and *without* sub-block
+poisoning (unlike TPUv4); above the rack it falls back to whole-healthy-
+rack unions.  Registry-wide bit-exactness gates (batched == scalar, jax
+kernel parity) already run over "ub-mesh" via tests/test_registry.py and
+tools/check_registry.py -- here we pin the numbers those gates only
+compare.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import arch
+from repro.core.arch import make_model
+from repro.core.cost_model import bom_for
+
+
+def test_ub_mesh_registered_with_contract():
+    spec = arch.get("ub-mesh")
+    assert spec.paper.startswith("UB-Mesh")
+    assert not spec.default_sweep              # rival: opt-in only
+    assert spec.placement_variant == "dgx-island"
+
+
+def test_ub_mesh_bom_pinned():
+    # one 16-node rack: 120 ACC full-mesh cables + 16 DAC uplinks
+    bom = bom_for("ub-mesh")
+    assert bom.gpus == 64
+    assert round(bom.per_gpu_cost, 2) == 649.90
+
+
+def test_ub_mesh_pools_within_rack_without_spares():
+    model = make_model("ub-mesh", 96)          # 6 racks of 16 nodes
+    assert model.evaluate(set(), 32).placed_gpus == 384
+    # one node fault costs exactly its 4 GPUs at rack-fitting TP=4 ...
+    r = model.evaluate({0}, 4)
+    assert (r.placed_gpus, r.faulty_gpus) == (380, 4)
+    # ... and rounds the rack down to the TP boundary otherwise: no
+    # spares to splice in (NVL would), no wider poisoning (TPUv4 would)
+    assert model.evaluate({0}, 32).placed_gpus == 32 + 5 * 64
+    assert model.evaluate({0}, 8).placed_gpus == 56 + 5 * 64
+    # a second fault in the SAME rack keeps rounding that one rack only
+    assert model.evaluate({0, 1}, 32).placed_gpus == 32 + 5 * 64
+    assert model.evaluate({0, 1}, 8).placed_gpus == 56 + 5 * 64
+
+
+def test_ub_mesh_above_rack_is_whole_healthy_rack_unions():
+    model = make_model("ub-mesh", 96)
+    # fault-free: all 6 racks union into 384 GPUs; TP-128 carves 3 groups
+    assert model.evaluate(set(), 128).placed_gpus == 384
+    # one faulty node poisons its whole rack for the inter-rack mesh
+    assert model.evaluate({0}, 128).placed_gpus == 256
+    # two faults in one rack cost no more than one
+    assert model.evaluate({0, 1}, 128).placed_gpus == 256
+    # ... but spread across racks they knock out each one they touch
+    assert model.evaluate({0, 16}, 128).placed_gpus == 256   # 4 racks left
+    assert model.evaluate({0, 16, 32}, 128).placed_gpus == 128
+
+
+def test_ub_mesh_ignores_unmodeled_tail_nodes():
+    model = make_model("ub-mesh", 100)         # 6 racks + 4 stray nodes
+    assert model.evaluate(set(), 16).total_gpus == 384
+    # faults on tail nodes change nothing
+    a = model.evaluate({97, 98}, 16)
+    assert (a.placed_gpus, a.faulty_gpus) == (384, 0)
+
+
+@pytest.mark.parametrize("num_nodes", [96, 257])
+def test_ub_mesh_batched_matches_scalar(num_nodes):
+    model = make_model("ub-mesh", num_nodes)
+    rng = np.random.default_rng(7)
+    masks = rng.random((12, num_nodes)) < 0.15
+    tps = [4, 8, 16, 48, 64, 128, 256]
+    grid = model.evaluate_batch(masks, tps)
+    for si in range(masks.shape[0]):
+        faults = set(np.nonzero(masks[si])[0].tolist())
+        for ti, tp in enumerate(tps):
+            ref = model.evaluate(faults, tp)
+            got = grid.result(si, ti)
+            assert (got.total_gpus, got.faulty_gpus, got.placed_gpus) \
+                == (ref.total_gpus, ref.faulty_gpus, ref.placed_gpus), \
+                (si, tp)

@@ -57,6 +57,9 @@ REQUIRED_KEYS = {
               "gate_floors_snaps_per_sec", "numpy_snaps_per_sec",
               "overlap_snapshots", "stream_equal", "full_snaps_per_sec",
               "peak_rss_mb", "churn_stream_equal", "runtime", "telemetry"},
+    "serve": {"smoke", "num_nodes", "intervals", "architectures",
+              "arrival_streams", "requests_total", "scalar_s", "numpy_s",
+              "bit_exact", "slo_table", "goodput_retention_ok", "telemetry"},
 }
 
 #: Shape of the ``telemetry`` block ``benchmarks.common.write_json`` stamps
