@@ -27,7 +27,8 @@ import traceback
 
 SECTIONS = ("waste_ratio", "max_job", "fault_waiting", "sweep", "churn",
             "dcn", "mfu_tables", "orchestration", "cost", "matrix", "scale",
-            "serve", "collectives_bench", "kernels_bench", "roofline")
+            "serve", "faults", "collectives_bench", "kernels_bench",
+            "roofline")
 
 
 def main() -> None:

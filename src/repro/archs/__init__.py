@@ -14,6 +14,6 @@ imports it) at module level -- defer device-backend imports into the
 kernel builder, which only runs once a JAX sweep is requested.
 """
 
-from . import rail_only, railx, ub_mesh
+from . import rail_only, railx, ub_mesh, acos
 
-__all__ = ["rail_only", "railx", "ub_mesh"]
+__all__ = ["rail_only", "railx", "ub_mesh", "acos"]

@@ -1,0 +1,29 @@
+"""Structured fault-scenario generators (counter-threefry seeded).
+
+One contract for every generator (:mod:`repro.faults.base`): a seeded
+integer-tick grid whose NumPy and JAX mask streams are bit-identical,
+emitted both as a batched Snapshots source (``masks(num_nodes)`` for the
+``repro.sim``/``repro.dcn``/``repro.cost`` grid engines) and as a
+:class:`repro.core.trace.FaultTrace` (``trace(num_nodes)`` for the
+``repro.churn``/``repro.slo`` replay engines).  ``benchmarks/faults.py``
+replays the whole family through churn, DCN traffic, cost and SLO tables
+and quantifies where the paper's near-zero claims break under correlated
+failures.
+"""
+
+from .base import (NumpyDraw, StructuredScenario, bernoulli, masks_to_trace,
+                   trunc_geometric, trunc_geometric_mean, uniform_int,
+                   wrap_occupancy)
+from .generators import (BurstStorms, CorrelatedTorOutages,
+                         FlappingStragglers, MaintenanceWindows)
+
+#: The shipped family, in benchmark order.
+GENERATORS = (CorrelatedTorOutages, MaintenanceWindows, BurstStorms,
+              FlappingStragglers)
+
+__all__ = [
+    "StructuredScenario", "NumpyDraw", "bernoulli", "uniform_int",
+    "trunc_geometric", "trunc_geometric_mean", "wrap_occupancy",
+    "masks_to_trace", "CorrelatedTorOutages", "MaintenanceWindows",
+    "BurstStorms", "FlappingStragglers", "GENERATORS",
+]

@@ -1,0 +1,188 @@
+"""Structured fault scenarios: one counter-threefry contract.
+
+Every generator in :mod:`repro.faults` describes node faults on a regular
+*integer tick grid*: snapshot ``s`` is the cluster state during
+``[s * tick_h, (s + 1) * tick_h)`` hours.  All randomness is uint32
+threefry draws (:mod:`repro.core.prng`) followed by pure integer/boolean
+arithmetic -- modular starts, truncated-geometric durations via cumprod of
+Bernoulli continue-bits, threshold comparisons -- so the NumPy and JAX
+backends produce *bit-identical* mask streams from one seed, exactly like
+``CounterIIDSnapshots``; nothing ever hinges on float rounding.
+
+One ``_grid(num_nodes, xp, draw)`` hook yields every emission:
+
+  * :meth:`StructuredScenario.masks` -- the batched ``(samples, nodes)``
+    Snapshots source (duck-compatible with ``ScenarioSpec.snapshots``, so
+    ``repro.sim``/``repro.dcn``/``repro.cost`` grids consume it directly);
+  * :meth:`StructuredScenario.jax_masks` -- the same grid computed with
+    ``jnp`` ops and the :mod:`repro.faults.jax_mirror` draws;
+  * :meth:`StructuredScenario.trace` -- a :class:`repro.core.trace.FaultTrace`
+    built from the runs of consecutive faulty ticks, for
+    ``repro.churn``/``repro.slo`` replay.  The round trip is exact:
+    ``trace(n).fault_masks(sample_times()) == masks(n)`` bit-for-bit
+    (event edges are the same ``tick * tick_h`` float64 products the
+    sample grid uses, so searchsorted recovers the tick indices).
+
+Uniform integers are drawn as ``u32 % n``; the modulo bias is at most
+``n / 2**32`` (~1e-7 for any grid here) and the analytic statistics the
+generators advertise ignore it -- the hypothesis tolerances are orders of
+magnitude wider.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from .. import obs
+from ..core.prng import (ratio_threshold, threefry_bits, threefry_fold_in,
+                         threefry_seed)
+from ..core.trace import FaultEvent, FaultTrace
+
+
+class NumpyDraw:
+    """Named threefry sub-streams: ``bits(stream, shape)`` draws an
+    independent uint32 block per stream id (key = fold_in(seed, stream)),
+    so generators can consume draws in any order without aliasing."""
+
+    def __init__(self, seed: int):
+        self._root = threefry_seed(seed)
+
+    def bits(self, stream: int, shape) -> np.ndarray:
+        if isinstance(shape, int):
+            shape = (shape,)
+        size = 1
+        for dim in shape:
+            size *= int(dim)
+        key = threefry_fold_in(self._root, stream)
+        return threefry_bits(key, size).reshape(shape)
+
+
+def bernoulli(bits, ratio: float, xp):
+    """``bits < round(ratio * 2**32)`` with the degenerate thresholds
+    handled outside uint32 range (same convention as counter_fault_masks)."""
+    thresh = ratio_threshold(ratio)
+    if thresh >= (1 << 32):
+        return xp.ones(bits.shape, dtype=bool)
+    if thresh <= 0:
+        return xp.zeros(bits.shape, dtype=bool)
+    return bits < xp.uint32(thresh)
+
+
+def uniform_int(bits, n: int, xp):
+    """Uniform-ish integers in ``[0, n)`` via ``u32 % n`` (bias <= n/2**32)."""
+    return (bits % xp.uint32(int(n))).astype(xp.int32)
+
+
+def trunc_geometric(bits, continue_p: float, xp):
+    """Truncated-geometric lengths in ``[1, bits.shape[-1] + 1]``.
+
+    ``bits[..., j]`` is the Bernoulli(continue_p) "survive tick j+1" draw;
+    the length is ``1 + leading-run of continues`` (cumprod + sum), so
+    ``P(len = 1+j) = p^j (1-p)`` for ``j < m`` and ``P(len = 1+m) = p^m``
+    with ``m = bits.shape[-1]`` -- a memoryless decay with a hard cap.
+    """
+    cont = bernoulli(bits, continue_p, xp)
+    ext = xp.cumprod(cont.astype(xp.int32), axis=-1).sum(axis=-1)
+    return (1 + ext).astype(xp.int32)
+
+
+def trunc_geometric_mean(continue_p: float, max_extra: int) -> float:
+    """Analytic mean of :func:`trunc_geometric`: ``1 + sum_{j=1..m} p^j``."""
+    p = float(continue_p)
+    if p == 1.0:
+        return 1.0 + max_extra
+    return 1.0 + p * (1.0 - p ** max_extra) / (1.0 - p)
+
+
+def wrap_occupancy(xp, ticks: int, starts, durs, active):
+    """Occupancy of wraparound events on a circular tick grid.
+
+    ``starts``/``durs`` are int32 ``(lanes, events)`` (durations must not
+    exceed ``ticks``), ``active`` a matching bool mask; lane ``l`` is down
+    at tick ``t`` iff some active event covers it circularly:
+    ``(t - start) mod ticks < dur``.  Circular time makes the marginal
+    exactly uniform -- P(an event slot covers any fixed tick) =
+    ``p_active * E[dur] / ticks`` -- which is what the generators'
+    analytic statistics (and their hypothesis tests) rely on.
+    Returns bool ``(ticks, lanes)``.
+    """
+    t = xp.arange(ticks, dtype=xp.int32)[:, None, None]
+    rel = (t - starts[None]) % xp.int32(ticks)
+    cov = active[None] & (rel < durs[None])
+    return cov.any(axis=2)
+
+
+def masks_to_trace(masks: np.ndarray, tick_h: float) -> FaultTrace:
+    """Convert a ``(samples, nodes)`` tick grid into a :class:`FaultTrace`.
+
+    Each maximal run of consecutive faulty ticks ``[s0, s1]`` on a node
+    becomes one event ``[s0 * tick_h, (s1 + 1) * tick_h)``; evaluating
+    ``fault_masks`` back on the tick grid reproduces ``masks`` exactly.
+    """
+    masks = np.asarray(masks, dtype=bool)
+    samples, num_nodes = masks.shape
+    tick_h = float(tick_h)
+    grid = np.zeros((num_nodes, samples + 2), dtype=np.int8)
+    grid[:, 1:-1] = masks.T
+    d = np.diff(grid, axis=1)                      # (nodes, samples + 1)
+    n0, t0 = np.nonzero(d > 0)                     # run starts
+    n1, t1 = np.nonzero(d < 0)                     # first tick after a run
+    events: List[FaultEvent] = [
+        FaultEvent(int(n), float(s) * tick_h, float(e) * tick_h)
+        for n, s, e in zip(n0, t0, t1)]
+    return FaultTrace(num_nodes=num_nodes, horizon_h=samples * tick_h,
+                      events=events)
+
+
+class StructuredScenario:
+    """Base class: tick grid + seed + the three emissions."""
+
+    label = "structured"
+
+    def __init__(self, samples: int, tick_h: float = 1.0, seed: int = 0):
+        if samples <= 0:
+            raise ValueError("samples must be positive")
+        if tick_h <= 0:
+            raise ValueError("tick_h must be positive")
+        self.samples = int(samples)
+        self.tick_h = float(tick_h)
+        self.seed = int(seed)
+
+    @property
+    def horizon_h(self) -> float:
+        return self.samples * self.tick_h
+
+    def sample_times(self) -> np.ndarray:
+        """Tick left edges; ``trace(n).fault_masks(sample_times())`` equals
+        ``masks(n)`` bit-for-bit."""
+        return np.arange(self.samples) * self.tick_h
+
+    def _grid(self, num_nodes: int, xp, draw):
+        raise NotImplementedError
+
+    def masks(self, num_nodes: int) -> np.ndarray:
+        """The batched Snapshots emission (NumPy, ``(samples, nodes)``)."""
+        with obs.span(f"faults.{self.label}.masks", samples=self.samples,
+                      nodes=num_nodes):
+            out = self._grid(int(num_nodes), np, NumpyDraw(self.seed))
+        return np.asarray(out, dtype=bool)
+
+    def jax_masks(self, num_nodes: int):
+        """The same grid computed on the JAX backend (bit-identical)."""
+        from .jax_mirror import HAVE_JAX, JaxDraw, jnp
+        if not HAVE_JAX:
+            raise RuntimeError(f"{self.label}.jax_masks requires jax")
+        with obs.span(f"faults.{self.label}.jax_masks",
+                      samples=self.samples, nodes=num_nodes):
+            return self._grid(int(num_nodes), jnp, JaxDraw(self.seed))
+
+    def trace(self, num_nodes: int) -> FaultTrace:
+        """The replayable emission for ``repro.churn`` / ``repro.slo``."""
+        return masks_to_trace(self.masks(num_nodes), self.tick_h)
+
+
+__all__ = ["NumpyDraw", "bernoulli", "uniform_int", "trunc_geometric",
+           "trunc_geometric_mean", "wrap_occupancy", "masks_to_trace",
+           "StructuredScenario"]

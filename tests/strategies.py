@@ -1,0 +1,86 @@
+"""Shared hypothesis strategies for the property suites.
+
+Hoists the ad-hoc fault-set / TP / geometry strategies previously
+duplicated across ``test_properties.py``, ``test_dcn_properties.py`` and
+``test_registry.py``, plus registry-aware and generator-scenario
+strategies for the structured-fault suites.  Import this module only
+under a hypothesis guard (``pytest.importorskip("hypothesis")`` or the
+``HAVE_HYPOTHESIS`` try/except pattern) -- it imports hypothesis at the
+top level by design.
+"""
+
+from hypothesis import strategies as st
+
+from repro.core import arch
+
+#: TP sizes the paper's tables sweep.
+TP_SIZES = st.sampled_from([8, 16, 32, 64])
+
+#: TP grid with awkward non-powers (registry bit-exactness probes).
+AWKWARD_TPS = st.sampled_from([4, 8, 16, 24, 32, 48, 64, 128])
+
+#: (num_nodes, agg_domain, m, k) fat-tree placement geometry.
+GEOMETRY = st.tuples(
+    st.sampled_from([64, 128, 192, 256]),        # num_nodes
+    st.sampled_from([8, 16, 32, 64]),            # agg_domain
+    st.sampled_from([1, 2, 4, 8]),               # m (nodes per group)
+    st.integers(1, 4),                           # k
+)
+
+#: Threefry seeds (the generators accept any int; this covers the range
+#: the repo actually pins digests for).
+SEEDS = st.integers(0, 2**31 - 1)
+
+
+def fault_sets(max_node: int, max_size: int):
+    """Random fault-node sets over ``[0, max_node]``."""
+    return st.sets(st.integers(0, max_node), max_size=max_size)
+
+
+def arch_names(priced=None, default_sweep=None):
+    """Registry-aware architecture names, optionally filtered."""
+    names = []
+    for spec in arch.specs():
+        if priced is not None and spec.priced != priced:
+            continue
+        if default_sweep is not None and spec.default_sweep != default_sweep:
+            continue
+        names.append(spec.name)
+    return st.sampled_from(names)
+
+
+# ------------------------------------------- structured fault scenarios
+
+def tor_outage_scenarios(samples=st.sampled_from([256, 400])):
+    """CorrelatedTorOutages instances with analytically tractable knobs."""
+    from repro.faults import CorrelatedTorOutages
+    return st.builds(
+        CorrelatedTorOutages, samples=samples, seed=SEEDS,
+        event_p=st.floats(0.2, 0.8),
+        events_per_domain=st.integers(2, 6),
+        node_event_p=st.floats(0.05, 0.4))
+
+
+def maintenance_scenarios(samples=st.sampled_from([200, 336])):
+    from repro.faults import MaintenanceWindows
+    return st.builds(
+        MaintenanceWindows, samples=samples, seed=SEEDS,
+        period_ticks=st.sampled_from([12, 24, 48]),
+        window_ticks=st.integers(1, 8))
+
+
+def burst_storm_scenarios(samples=st.just(400)):
+    from repro.faults import BurstStorms
+    return st.builds(
+        BurstStorms, samples=samples, seed=SEEDS,
+        max_storms=st.just(256),
+        gap_continue_p=st.floats(0.6, 0.95),
+        decay_continue_p=st.floats(0.3, 0.8))
+
+
+def flapper_scenarios(samples=st.sampled_from([200, 336])):
+    from repro.faults import FlappingStragglers
+    return st.builds(
+        FlappingStragglers, samples=samples, seed=SEEDS,
+        flap_p=st.floats(0.02, 0.3),
+        up_ticks=st.integers(2, 8), down_ticks=st.integers(1, 3))

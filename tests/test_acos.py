@@ -1,0 +1,105 @@
+"""ACOS rival (arXiv 2602.17449): cheap-switch-array waste semantics.
+
+The distinctive position in the zoo, pinned: inside an array it regroups
+as freely as a big switch, across arrays it can only export a capped
+remainder over the trunks -- so at array-fitting TP it beats island
+architectures (the remainder pool carves extra groups) while staying
+bounded by big-switch.  Registry-wide bit-exactness gates (batched ==
+scalar, jax kernel parity) already run over "acos" via
+tests/test_registry.py and tools/check_registry.py -- here we pin the
+numbers those gates only compare.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import arch
+from repro.core.arch import make_model
+from repro.core.cost_model import bom_for
+
+
+def test_acos_registered_with_contract():
+    spec = arch.get("acos")
+    assert spec.paper.startswith("ACOS")
+    assert not spec.default_sweep              # rival: opt-in only
+    assert spec.placement_variant == "dgx-island"
+
+
+def test_acos_bom_pinned():
+    # one 32-node array: 64 transceivers + 8 cheap 32-port OCS + fiber
+    bom = bom_for("acos")
+    assert bom.gpus == 128
+    assert round(bom.per_gpu_cost, 2) == 553.40
+    # the ACOS pitch: cheaper per GPU than the single-big-OCS rivals
+    assert bom.per_gpu_cost < bom_for("railx").per_gpu_cost
+
+
+def test_acos_pools_remainders_over_trunks():
+    model = make_model("acos", 64)             # 2 arrays of 32 nodes
+    # fault-free, array-fitting TP: no fragmentation at all
+    assert model.evaluate(set(), 32).placed_gpus == 256
+    # one fault costs exactly its 4 GPUs at TP=4
+    r = model.evaluate({0}, 4)
+    assert (r.placed_gpus, r.faulty_gpus) == (252, 4)
+    # TP=48: each array strands 32 GPUs locally, but both remainders fit
+    # the 8-node trunk budget and pool into one extra cross-array group
+    assert model.evaluate(set(), 48).placed_gpus == 2 * 96 + 48
+    # TP=8 with one fault: the 4-GPU remainder exports but cannot carve
+    assert model.evaluate({0}, 8).placed_gpus == 248
+
+
+def test_acos_trunk_cap_limits_the_export():
+    # 1 array of 32 nodes: uplink cap = 8 nodes = 32 GPUs
+    model = make_model("acos", 32)
+    # TP=48: remainder after 2 groups is 32 GPUs == cap, but a single
+    # array's pool cannot reach another remainder: no extra group
+    assert model.evaluate(set(), 48).placed_gpus == 96
+    # 3 arrays at TP=120: remainders are 8 GPUs each -> pool 24 < 120
+    m3 = make_model("acos", 96)
+    assert m3.evaluate(set(), 120).placed_gpus == 3 * 120
+
+
+def test_acos_above_array_pools_all_healthy_capacity():
+    model = make_model("acos", 96)             # 3 arrays, 384 GPUs
+    assert model.evaluate(set(), 256).placed_gpus == 256
+    # spanning circuits splice around faults: lose only the mod
+    assert model.evaluate({0}, 256).placed_gpus == 256
+    # even a whole array plus change down (30 faults, 264 GPUs left)
+    # still carves one 256-group from the spanning pool
+    assert model.evaluate(set(range(30)), 256).placed_gpus == 256
+
+
+def test_acos_ignores_unmodeled_tail_nodes():
+    model = make_model("acos", 70)             # 2 arrays + 6 stray nodes
+    assert model.evaluate(set(), 16).total_gpus == 256
+    a = model.evaluate({65, 69}, 16)
+    assert (a.placed_gpus, a.faulty_gpus) == (256, 0)
+
+
+def test_acos_never_beats_big_switch():
+    bs = make_model("big-switch", 96)
+    model = make_model("acos", 96)
+    rng = np.random.default_rng(11)
+    for _ in range(20):
+        faults = set(rng.choice(96, size=rng.integers(0, 25),
+                                replace=False).tolist())
+        for tp in (8, 24, 48, 128, 256):
+            assert model.evaluate(faults, tp).placed_gpus \
+                <= bs.evaluate(faults, tp).placed_gpus
+
+
+@pytest.mark.parametrize("num_nodes", [96, 257])
+def test_acos_batched_matches_scalar(num_nodes):
+    model = make_model("acos", num_nodes)
+    rng = np.random.default_rng(7)
+    masks = rng.random((12, num_nodes)) < 0.15
+    tps = [4, 8, 16, 48, 64, 128, 256]
+    grid = model.evaluate_batch(masks, tps)
+    for si in range(masks.shape[0]):
+        faults = set(np.nonzero(masks[si])[0].tolist())
+        for ti, tp in enumerate(tps):
+            ref = model.evaluate(faults, tp)
+            got = grid.result(si, ti)
+            assert (got.total_gpus, got.faulty_gpus, got.placed_gpus) \
+                == (ref.total_gpus, ref.faulty_gpus, ref.placed_gpus), \
+                (si, tp)

@@ -11,21 +11,15 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
+import strategies as cst
+from strategies import GEOMETRY
 from repro.core.orchestrator import (cross_tor_traffic, deployment_strategy,
                                      orchestrate_fat_tree,
                                      placement_fat_tree)
 from repro.dcn import FatTreeConfig, batched_fat_tree, batched_pair_counts
 
-GEOMETRY = st.tuples(
-    st.sampled_from([64, 128, 192, 256]),        # num_nodes
-    st.sampled_from([8, 16, 32, 64]),            # agg_domain
-    st.sampled_from([1, 2, 4, 8]),               # m (nodes per group)
-    st.integers(1, 4),                           # k
-)
 
-
-@given(GEOMETRY, st.sets(st.integers(0, 255), max_size=40),
-       st.integers(0, 24))
+@given(GEOMETRY, cst.fault_sets(255, 40), st.integers(0, 24))
 @settings(max_examples=50, deadline=None)
 def test_tiered_placement_invariants(geom, faults, n_constraints):
     """Group disjointness, fault avoidance, and capacity bounds hold at
@@ -43,7 +37,7 @@ def test_tiered_placement_invariants(geom, faults, n_constraints):
     assert len(scheme) * m <= n - len(faults)    # capacity bound
 
 
-@given(GEOMETRY, st.sets(st.integers(0, 255), max_size=60))
+@given(GEOMETRY, cst.fault_sets(255, 60))
 @settings(max_examples=50, deadline=None)
 def test_full_constraints_never_increase_cross_tor(geom, faults):
     """Tightening from no constraints to the full tier set never increases
@@ -63,7 +57,7 @@ def test_full_constraints_never_increase_cross_tor(geom, faults):
     assert s1 <= s0 + 1e-12
 
 
-@given(st.sampled_from([128, 256]), st.sets(st.integers(0, 255), max_size=50),
+@given(st.sampled_from([128, 256]), cst.fault_sets(255, 50),
        st.sampled_from([8, 16, 32]), st.floats(0.3, 0.9))
 @settings(max_examples=40, deadline=None)
 def test_batched_equals_scalar_on_random_fault_sets(n, faults, tp, scale):

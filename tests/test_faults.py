@@ -1,0 +1,199 @@
+"""Structured fault scenarios: the generator contract, deterministically.
+
+Round-trip exactness (trace <-> masks on the tick grid), engine
+integration (ScenarioSpec duck-typing, churn replay scalar == batched,
+JAX backend equality) and the straggler wiring through
+``ClusterManager.flag_stragglers`` / ``ElasticRunner``.  The *statistical*
+claims live in ``test_faults_stats.py``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.control_plane import ClusterManager
+from repro.faults import (GENERATORS, BurstStorms, CorrelatedTorOutages,
+                          FlappingStragglers, MaintenanceWindows,
+                          masks_to_trace)
+
+NODES = 96
+
+
+def _gen(cls, **kw):
+    kw.setdefault("samples", 120)
+    kw.setdefault("seed", 5)
+    return cls(**kw)
+
+
+# ------------------------------------------------------------ the contract
+
+@pytest.mark.parametrize("cls", GENERATORS)
+def test_trace_masks_round_trip_is_exact(cls):
+    gen = _gen(cls)
+    masks = gen.masks(NODES)
+    trace = gen.trace(NODES)
+    assert trace.num_nodes == NODES
+    assert trace.horizon_h == gen.horizon_h
+    assert np.array_equal(trace.fault_masks(gen.sample_times()), masks)
+
+
+@pytest.mark.parametrize("cls", GENERATORS)
+def test_trace_events_are_well_formed(cls):
+    gen = _gen(cls, tick_h=0.5)
+    trace = gen.trace(NODES)
+    for e in trace.events:
+        assert 0 <= e.node < NODES
+        assert 0.0 <= e.start_h < e.end_h <= trace.horizon_h
+
+
+@pytest.mark.parametrize("cls", GENERATORS)
+def test_masks_deterministic_and_seed_sensitive(cls):
+    a, b = _gen(cls), _gen(cls)
+    assert np.array_equal(a.masks(NODES), b.masks(NODES))
+    c = _gen(cls, seed=6)
+    assert not np.array_equal(a.masks(NODES), c.masks(NODES))
+
+
+def test_masks_to_trace_edges():
+    # empty grid: no events; run touching the horizon: end clipped there
+    empty = masks_to_trace(np.zeros((4, 3), dtype=bool), 1.0)
+    assert empty.events == []
+    m = np.zeros((4, 2), dtype=bool)
+    m[2:, 1] = True                      # run [2, 4) on node 1
+    tr = masks_to_trace(m, 2.0)
+    assert len(tr.events) == 1
+    e = tr.events[0]
+    assert (e.node, e.start_h, e.end_h) == (1, 4.0, 8.0)
+    assert tr.horizon_h == 8.0
+
+
+# ------------------------------------------------------ engine integration
+
+@pytest.mark.parametrize("cls", GENERATORS)
+def test_generators_are_scenario_snapshot_sources(cls):
+    from repro.sim import ScenarioSpec, run_sweep, run_sweep_scalar
+    gen = _gen(cls, samples=12)
+    spec = ScenarioSpec(num_nodes=64, snapshots=gen, tp_sizes=(16, 32),
+                        architectures=("big-switch", "infinitehbd-k3",
+                                       "acos"))
+    res = run_sweep(spec, backend="numpy")
+    ref = run_sweep_scalar(spec)
+    assert np.array_equal(res.placed_gpus, ref.placed_gpus)
+    assert np.array_equal(res.faulty_gpus, ref.faulty_gpus)
+
+
+def test_generator_masks_bit_exact_across_backends():
+    pytest.importorskip("jax")
+    from repro.sim import evaluate_masks
+    from repro.sim.scenario import make_model
+    gen = CorrelatedTorOutages(samples=24, seed=3)
+    masks = gen.masks(64)
+    models = [make_model(a, 64) for a in ("big-switch", "infinitehbd-k3",
+                                          "ub-mesh", "acos")]
+    t_np, f_np, p_np, b_np = evaluate_masks(models, (16, 32), masks,
+                                            backend="numpy")
+    t_j, f_j, p_j, b_j = evaluate_masks(models, (16, 32), masks,
+                                        backend="jax")
+    assert (b_np, b_j) == ("numpy", "jax")
+    assert np.array_equal(p_np, p_j) and np.array_equal(f_np, f_j)
+
+
+@pytest.mark.parametrize("cls", GENERATORS)
+def test_churn_replay_batched_equals_scalar(cls):
+    from repro.churn import replay_trace
+    gen = _gen(cls, samples=48)
+    trace = gen.trace(64)
+    kw = dict(tp_sizes=(16, 32), architectures=("big-switch",
+                                                "infinitehbd-k3"))
+    batched = replay_trace(trace, engine="batched", **kw)
+    scalar = replay_trace(trace, engine="scalar", **kw)
+    assert np.array_equal(batched.placed_gpus, scalar.placed_gpus)
+    assert np.array_equal(batched.faulty_gpus, scalar.faulty_gpus)
+    assert np.array_equal(batched.edges_h, scalar.edges_h)
+
+
+# ------------------------------------------------- deterministic semantics
+
+def test_maintenance_drains_at_most_one_domain_at_a_time():
+    gen = MaintenanceWindows(samples=200, seed=9, domain_nodes=8,
+                             period_ticks=24, window_ticks=6)
+    masks = gen.masks(NODES)
+    doms = masks.reshape(200, NODES // 8, 8)
+    down_domains = doms.any(axis=2)
+    assert down_domains.sum(axis=1).max() <= 1
+    # a drained domain is drained whole -- never a partial ToR
+    assert np.array_equal(doms.all(axis=2), down_domains)
+    # the marginal is exact, not approximate
+    assert masks.mean() == pytest.approx(gen.expected_fault_ratio(NODES),
+                                         abs=1e-12)
+
+
+def test_tor_outages_take_whole_domains_down():
+    gen = CorrelatedTorOutages(samples=150, seed=2, node_event_p=0.0)
+    masks = gen.masks(NODES)
+    doms = masks.reshape(150, NODES // 8, 8)
+    # background off: a faulty node always means its whole ToR is out
+    assert np.array_equal(doms.any(axis=2), doms.all(axis=2))
+    assert masks.any()
+
+
+def test_burst_storms_land_at_their_seeded_starts():
+    gen = BurstStorms(samples=150, seed=4, hit_p=1.0)
+    masks = gen.masks(32)
+    starts = gen.storm_starts()
+    starts = starts[(starts >= 0) & (starts < 150)]
+    # hit_p=1: every storm knocks out the full fleet at its start tick
+    assert starts.size > 0
+    assert masks[starts].all()
+
+
+# ------------------------------------------------------- straggler wiring
+
+def test_flapper_schedule_drives_flag_stragglers():
+    gen = FlappingStragglers(samples=60, seed=8, flap_p=0.12)
+    masks = gen.masks(NODES)
+    sched = gen.straggler_schedule(NODES, steps=60)
+    cm = ClusterManager(NODES, 4)
+    for step in range(60):
+        flagged = cm.flag_stragglers(sched[step], threshold=1.5)
+        assert flagged == set(np.nonzero(masks[step])[0].tolist()), step
+
+
+@pytest.mark.slow
+def test_flapper_schedule_rides_elastic_runner_fault_path():
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_arch
+    from repro.train.data import data_iter
+    from repro.train.elastic import ElasticConfig, ElasticRunner
+    from repro.train.loop import (TrainConfig, init_train_state,
+                                  make_train_step)
+    from repro.train.optimizer import OptConfig
+    import tempfile
+
+    gen = FlappingStragglers(samples=12, seed=3, flap_p=0.2, up_ticks=3,
+                             down_ticks=1)
+    flappers = gen.flappers(8)
+    assert flappers, "seed must flap at least one of the 8 reporting nodes"
+    cfg = get_arch("h2o-danube-1.8b").reduced()
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=2))
+
+    def build_step(mesh, plan, dp):
+        state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, tcfg))
+        data = data_iter(cfg, batch=2, seq=16)
+        return state, step, data
+
+    sched = gen.straggler_schedule(8, steps=6)
+    with tempfile.TemporaryDirectory() as d:
+        ecfg = ElasticConfig(num_nodes=64, gpus_per_node=4, tp_size=16,
+                             dp_size=14, checkpoint_every=3)
+        runner = ElasticRunner(ecfg, d, build_step)
+        _, losses = runner.run(total_steps=6, straggler_schedule=sched)
+        sev = [e for e in runner.events if e[0] == "straggler"]
+        # whichever step first reported a flapping window triggered the
+        # fault path, and the flagged nodes are the generator's flappers
+        assert sev, "no straggler event fired"
+        for _, step, nodes in sev:
+            assert set(nodes) <= set(flappers)
+            assert set(nodes) == set(np.nonzero(gen.masks(8)[step % 12])[0])
+        assert runner.cm.physical_faults >= set(sev[0][2])
+        assert len(losses) >= 6

@@ -1,0 +1,224 @@
+"""Statistical verification of the structured generators' advertised laws.
+
+Each generator claims closed-form statistics (see
+``repro.faults.generators``); this suite verifies them empirically:
+
+  * marginal fault ratio (ToR outages, flappers: sampling-noise bounds;
+    maintenance: *exact*),
+  * inter-event correlation within a ToR (strongly positive and matching
+    the analytic value; ~zero across ToRs),
+  * burst inter-arrival distribution (truncated-geometric mean and the
+    memoryless survivor ratio) and the exponential recovery decay.
+
+Property tests run under hypothesis when installed (the shared
+``tests/strategies.py`` scenario strategies); without it, the same check
+functions run over a seeded parameter sweep -- so the statistics are
+verified on bare installs too, like ``test_registry.py``.  Per-seed
+bounds are calibrated to the worst observed deviation over ~100 draws
+from the strategy ranges (x ~1.6 headroom); fixed-seed aggregates then
+pin the precision a single noisy realization cannot.
+"""
+
+import numpy as np
+import pytest
+
+from repro.faults import (BurstStorms, CorrelatedTorOutages,
+                          FlappingStragglers, MaintenanceWindows)
+
+NODES = 160                    # 20 domains of 8
+
+
+# ------------------------------------------------------- check functions
+
+def _check_tor_marginal(gen: CorrelatedTorOutages):
+    emp = gen.masks(NODES).mean()
+    exp = gen.expected_fault_ratio(NODES)
+    assert abs(emp - exp) <= 0.8 * exp + 0.005, (emp, exp)
+
+
+def _intra_domain_corr(masks: np.ndarray) -> float:
+    """Pooled Pearson correlation over all same-domain node pairs."""
+    samples = masks.shape[0]
+    doms = masks.reshape(samples, NODES // 8, 8).astype(np.float64)
+    px = masks.mean()
+    s = doms.sum(axis=2)
+    pair = ((s * s - (doms * doms).sum(axis=2)) / (8 * 7)).mean()
+    var = px * (1.0 - px)
+    return (pair - px * px) / var if var > 0 else 0.0
+
+
+def _check_tor_correlation(gen: CorrelatedTorOutages):
+    masks = gen.masks(NODES)
+    exp = gen.expected_intra_domain_correlation()
+    emp = _intra_domain_corr(masks)
+    assert emp > 0.3, "whole-ToR outages must correlate nodes in a ToR"
+    assert abs(emp - exp) <= 0.2, (emp, exp)
+    # nodes in *different* domains share nothing: correlation ~ 0
+    a = masks[:, 0::8].astype(np.float64)       # node 0 of each domain
+    b = masks[:, 9::8].astype(np.float64)       # node 1 of the NEXT domain
+    k = min(a.shape[1] - 1, b.shape[1])
+    x, y = a[:, :k].ravel(), b[:, :k].ravel()
+    if x.std() > 0 and y.std() > 0:
+        cross = float(np.corrcoef(x, y)[0, 1])
+        assert abs(cross) < 0.15, cross
+
+
+def _check_burst_gaps(gen: BurstStorms):
+    gaps = gen.storm_gaps()
+    exp = gen.expected_gap_ticks()
+    assert abs(gaps.mean() - exp) <= 0.2 * exp, (gaps.mean(), exp)
+    # memorylessness: P(gap > j+1 | gap > j) ~ continue_p below the cap
+    extra = gaps - 1
+    for j in range(3):
+        survivors = (extra > j).sum()
+        if survivors > 40:
+            ratio = (extra > j + 1).sum() / survivors
+            assert abs(ratio - gen.gap_continue_p) <= 0.25, (j, ratio)
+
+
+def _check_burst_decay(gen: BurstStorms):
+    hit, durs = gen.hit_durations(64)
+    down = durs[hit]
+    assert down.size > 100
+    exp = gen.expected_duration_ticks()
+    assert abs(down.mean() - exp) <= 0.1 * exp, (down.mean(), exp)
+    # exponential decay of the still-down fraction after a hit
+    p = gen.decay_continue_p
+    for j in range(1, 3):
+        frac = (down > j).sum() / down.size
+        assert abs(frac - p ** j) <= 0.1, (j, frac, p ** j)
+
+
+def _check_flapper_duty(gen: FlappingStragglers):
+    masks = gen.masks(200)
+    exp = gen.expected_fault_ratio(200)
+    duty = gen.down_ticks / gen.cycle_ticks
+    std = np.sqrt(gen.flap_p * (1 - gen.flap_p) / 200) * duty \
+        + gen.down_ticks / gen.samples
+    assert abs(masks.mean() - exp) <= 4.0 * std, (masks.mean(), exp)
+    # each flapper's duty cycle is tight: one boundary cycle of slack
+    for n in gen.flappers(200):
+        downs = int(masks[:, n].sum())
+        assert abs(downs - gen.samples * duty) <= gen.down_ticks, n
+
+
+def _check_maintenance_exact(gen: MaintenanceWindows):
+    masks = gen.masks(NODES)
+    assert masks.mean() == pytest.approx(gen.expected_fault_ratio(NODES),
+                                         abs=1e-12)
+    down_domains = masks.reshape(gen.samples, NODES // 8, 8).any(axis=2)
+    assert down_domains.sum(axis=1).max() <= 1
+
+
+# ----------------------------------------- hypothesis / seeded execution
+
+try:
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    import strategies as cst
+
+    @given(cst.tor_outage_scenarios())
+    @settings(max_examples=15, deadline=None)
+    def test_tor_marginal_fault_ratio(gen):
+        _check_tor_marginal(gen)
+
+    @given(cst.tor_outage_scenarios())
+    @settings(max_examples=15, deadline=None)
+    def test_tor_intra_domain_correlation(gen):
+        _check_tor_correlation(gen)
+
+    @given(cst.burst_storm_scenarios())
+    @settings(max_examples=15, deadline=None)
+    def test_burst_inter_arrival_distribution(gen):
+        _check_burst_gaps(gen)
+
+    @given(cst.burst_storm_scenarios())
+    @settings(max_examples=15, deadline=None)
+    def test_burst_exponential_decay(gen):
+        _check_burst_decay(gen)
+
+    @given(cst.flapper_scenarios())
+    @settings(max_examples=15, deadline=None)
+    def test_flapper_duty_cycle(gen):
+        _check_flapper_duty(gen)
+
+    @given(cst.maintenance_scenarios())
+    @settings(max_examples=15, deadline=None)
+    def test_maintenance_marginal_is_exact(gen):
+        _check_maintenance_exact(gen)
+else:                                                  # pragma: no cover
+    _RNG_SEEDS = list(range(5))
+
+    @pytest.mark.parametrize("seed", _RNG_SEEDS)
+    def test_tor_marginal_fault_ratio(seed):
+        rng = np.random.default_rng(seed)
+        _check_tor_marginal(CorrelatedTorOutages(
+            samples=int(rng.choice([256, 400])),
+            seed=int(rng.integers(2**31)),
+            event_p=float(rng.uniform(0.2, 0.8)),
+            events_per_domain=int(rng.integers(2, 7)),
+            node_event_p=float(rng.uniform(0.05, 0.4))))
+
+    @pytest.mark.parametrize("seed", _RNG_SEEDS)
+    def test_tor_intra_domain_correlation(seed):
+        rng = np.random.default_rng(100 + seed)
+        _check_tor_correlation(CorrelatedTorOutages(
+            samples=400, seed=int(rng.integers(2**31)),
+            event_p=float(rng.uniform(0.2, 0.8)),
+            node_event_p=float(rng.uniform(0.05, 0.4))))
+
+    @pytest.mark.parametrize("seed", _RNG_SEEDS)
+    def test_burst_inter_arrival_distribution(seed):
+        rng = np.random.default_rng(200 + seed)
+        _check_burst_gaps(BurstStorms(
+            samples=400, seed=int(rng.integers(2**31)), max_storms=256,
+            gap_continue_p=float(rng.uniform(0.6, 0.95))))
+
+    @pytest.mark.parametrize("seed", _RNG_SEEDS)
+    def test_burst_exponential_decay(seed):
+        rng = np.random.default_rng(300 + seed)
+        _check_burst_decay(BurstStorms(
+            samples=400, seed=int(rng.integers(2**31)), max_storms=256,
+            decay_continue_p=float(rng.uniform(0.3, 0.8))))
+
+    @pytest.mark.parametrize("seed", _RNG_SEEDS)
+    def test_flapper_duty_cycle(seed):
+        rng = np.random.default_rng(400 + seed)
+        _check_flapper_duty(FlappingStragglers(
+            samples=int(rng.choice([200, 336])),
+            seed=int(rng.integers(2**31)),
+            flap_p=float(rng.uniform(0.02, 0.3)),
+            up_ticks=int(rng.integers(2, 9)),
+            down_ticks=int(rng.integers(1, 4))))
+
+    @pytest.mark.parametrize("seed", _RNG_SEEDS)
+    def test_maintenance_marginal_is_exact(seed):
+        rng = np.random.default_rng(500 + seed)
+        _check_maintenance_exact(MaintenanceWindows(
+            samples=int(rng.choice([200, 336])),
+            seed=int(rng.integers(2**31)),
+            period_ticks=int(rng.choice([12, 24, 48])),
+            window_ticks=int(rng.integers(1, 9))))
+
+
+# ------------------------------------- fixed-seed precision aggregates
+
+def test_tor_marginal_aggregate_precision():
+    """A single realization is noisy; the 8-seed mean must sit within
+    ~25% of the analytic marginal (calibrated: ~3.5 aggregate stds)."""
+    gens = [CorrelatedTorOutages(samples=400, seed=s) for s in range(8)]
+    emp = np.mean([g.masks(NODES).mean() for g in gens])
+    exp = gens[0].expected_fault_ratio(NODES)
+    assert abs(emp - exp) <= 0.25 * exp, (emp, exp)
+
+
+def test_burst_gap_aggregate_precision():
+    gaps = np.concatenate([
+        BurstStorms(samples=400, seed=s, max_storms=256).storm_gaps()
+        for s in range(4)])
+    exp = BurstStorms(samples=400, seed=0).expected_gap_ticks()
+    assert abs(gaps.mean() - exp) <= 0.08 * exp, (gaps.mean(), exp)

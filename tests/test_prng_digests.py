@@ -1,0 +1,85 @@
+"""PRNG seed-stability pins: SHA-256 digests of the published streams.
+
+Every scenario in the repo -- the i.i.d. ``counter_fault_masks`` stream
+and each structured generator -- is pinned here byte-for-byte for fixed
+seeds, so a PRNG refactor (threefry schedule, fold-in layout, draw
+ordering) cannot silently reshuffle every published benchmark scenario.
+The JAX mirror is held to the *same* digests: NumPy and device streams
+are bit-identical, not merely statistically alike.
+"""
+
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.core.prng import counter_fault_masks
+from repro.faults import (BurstStorms, CorrelatedTorOutages,
+                          FlappingStragglers, MaintenanceWindows)
+
+
+def _sha(a) -> str:
+    return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()
+
+
+IID_PINS = [
+    # (num_nodes, ratio, samples, seed, start, sha256)
+    (64, 0.07, 32, 0, 0,
+     "f7c65ef07030e1adecbef2822a334e8323dacea58171b80dba7b242d0be2e784"),
+    (257, 0.0233, 16, 42, 0,
+     "87a83d499055a7f46f0c11d6046e2e6c64ba2e7c304a858f165254bcc97bb16b"),
+    # the streaming engines regenerate rows by offset: rows [16, 32) of
+    # the seed-0 stream, pinned independently of the full matrix
+    (64, 0.07, 16, 0, 16,
+     "998f12c2bd34938a8b46b222db4b0d99dff9c2e8e0c6ed82a9da0e16c13974d5"),
+]
+
+#: (generator factory, sha256 of masks(96)) at samples=128, seed=7.
+GENERATOR_PINS = [
+    (lambda: CorrelatedTorOutages(samples=128, seed=7),
+     "1b5d6d7492f36251b5b74fc5c28314923c1315712bef9397aad0ce50ce6fc8f1"),
+    (lambda: MaintenanceWindows(samples=128, seed=7),
+     "9132aeddd11588340bd237006d72476862d2394563e6e74da38db2769c88b559"),
+    (lambda: BurstStorms(samples=128, seed=7),
+     "1f2b1b812691d3c4d608118b12c1c90a7595ecf8553be482a51893416f39ee68"),
+    (lambda: FlappingStragglers(samples=128, seed=7),
+     "02d35517fedde8056c774457b9a418645b17d589e7f81b06b24187adca339834"),
+]
+
+
+@pytest.mark.parametrize("nodes,ratio,samples,seed,start,digest", IID_PINS)
+def test_counter_fault_masks_digest_pinned(nodes, ratio, samples, seed,
+                                           start, digest):
+    masks = counter_fault_masks(nodes, ratio, samples, seed=seed,
+                                start=start)
+    assert _sha(masks) == digest
+
+
+def test_counter_fault_masks_offset_consistent_with_full_stream():
+    full = counter_fault_masks(64, 0.07, 32, seed=0)
+    tail = counter_fault_masks(64, 0.07, 16, seed=0, start=16)
+    assert np.array_equal(full[16:], tail)
+
+
+@pytest.mark.parametrize("factory,digest", GENERATOR_PINS)
+def test_generator_masks_digest_pinned(factory, digest):
+    gen = factory()
+    assert _sha(gen.masks(96)) == digest
+
+
+@pytest.mark.parametrize("factory,digest", GENERATOR_PINS)
+def test_generator_jax_stream_matches_numpy_digest(factory, digest):
+    pytest.importorskip("jax")
+    gen = factory()
+    jm = np.asarray(gen.jax_masks(96))
+    assert _sha(jm) == digest
+    assert np.array_equal(jm, gen.masks(96))
+
+
+def test_seed_and_stream_separation():
+    """Different seeds give different grids; masks are deterministic."""
+    a = CorrelatedTorOutages(samples=64, seed=1)
+    b = CorrelatedTorOutages(samples=64, seed=2)
+    assert not np.array_equal(a.masks(64), b.masks(64))
+    assert np.array_equal(a.masks(64), CorrelatedTorOutages(
+        samples=64, seed=1).masks(64))

@@ -11,6 +11,7 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
+import strategies as cst
 from repro.core.hbd_models import BigSwitch, InfiniteHBDModel, default_suite
 from repro.core.orchestrator import (deployment_strategy, orchestrate_dcn_free,
                                      placement_fat_tree)
@@ -19,7 +20,7 @@ from repro.core.topology import KHopRingTopology, TopologyConfig
 
 # ------------------------------------------------------------- waste models
 
-@given(st.sets(st.integers(0, 719), max_size=40), st.sampled_from([8, 16, 32, 64]))
+@given(cst.fault_sets(719, 40), cst.TP_SIZES)
 @settings(max_examples=40, deadline=None)
 def test_waste_invariants(faults, tp):
     for model in default_suite(720, 4):
@@ -29,7 +30,7 @@ def test_waste_invariants(faults, tp):
         assert 0.0 <= r.waste_ratio <= 1.0
 
 
-@given(st.sets(st.integers(0, 719), max_size=30))
+@given(cst.fault_sets(719, 30))
 @settings(max_examples=40, deadline=None)
 def test_bigswitch_is_lower_bound(faults):
     bs = BigSwitch(720, 4)
@@ -38,7 +39,7 @@ def test_bigswitch_is_lower_bound(faults):
             bs.evaluate(faults, 32).placed_gpus
 
 
-@given(st.sets(st.integers(0, 719), max_size=30))
+@given(cst.fault_sets(719, 30))
 @settings(max_examples=40, deadline=None)
 def test_higher_k_never_worse(faults):
     k2 = InfiniteHBDModel(720, 4, k=2).evaluate(faults, 32)
@@ -48,8 +49,7 @@ def test_higher_k_never_worse(faults):
 
 # ------------------------------------------------------- topology/orchestrator
 
-@given(st.integers(8, 64), st.sets(st.integers(0, 63), max_size=10),
-       st.integers(1, 4))
+@given(st.integers(8, 64), cst.fault_sets(63, 10), st.integers(1, 4))
 @settings(max_examples=50, deadline=None)
 def test_waste_report_invariants(n, faults, k):
     faults = {f for f in faults if f < n}
@@ -62,7 +62,7 @@ def test_waste_report_invariants(n, faults, k):
         == rep["total_gpus"]
 
 
-@given(st.integers(16, 128), st.sets(st.integers(0, 127), max_size=20),
+@given(st.integers(16, 128), cst.fault_sets(127, 20),
        st.integers(1, 8), st.integers(1, 4))
 @settings(max_examples=60, deadline=None)
 def test_dcn_free_groups_are_valid_rings(n, faults, m, k):
@@ -78,7 +78,7 @@ def test_dcn_free_groups_are_valid_rings(n, faults, m, k):
     assert len(used) == len(set(used))
 
 
-@given(st.sets(st.integers(0, 255), max_size=24), st.integers(0, 20))
+@given(cst.fault_sets(255, 24), st.integers(0, 20))
 @settings(max_examples=30, deadline=None)
 def test_binary_search_monotone_feasible(faults, n_constraints):
     dep = deployment_strategy(256, 8)

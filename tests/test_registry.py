@@ -22,7 +22,7 @@ from repro.core.hbd_models import HBDModel
 EXPECTED_NAMES = (
     "big-switch", "infinitehbd-k2", "infinitehbd-k3", "nvl-36", "nvl-72",
     "nvl-576", "tpuv4", "sip-ring", "dgx-h100", "rail-only", "railx",
-    "ub-mesh",
+    "ub-mesh", "acos",
 )
 
 AWKWARD_TPS = [4, 8, 16, 24, 32, 48, 64, 128]
@@ -40,7 +40,7 @@ def test_default_architectures_are_the_default_sweep_specs():
     assert arch.default_architectures() == EXPECTED_NAMES[:8]
     from repro.sim import DEFAULT_ARCHITECTURES
     assert DEFAULT_ARCHITECTURES == arch.default_architectures()
-    for name in ("dgx-h100", "rail-only", "railx", "ub-mesh"):
+    for name in ("dgx-h100", "rail-only", "railx", "ub-mesh", "acos"):
         assert not arch.get(name).default_sweep
 
 
@@ -198,8 +198,9 @@ except ImportError:                                    # pragma: no cover
     HAVE_HYPOTHESIS = False
 
 if HAVE_HYPOTHESIS:
-    @given(st.sets(st.integers(0, 95), max_size=30),
-           st.sets(st.integers(0, 95), max_size=10),
+    import strategies as cst
+
+    @given(cst.fault_sets(95, 30), cst.fault_sets(95, 10),
            st.sampled_from([8, 24, 32]))
     @settings(max_examples=25, deadline=None)
     def test_registry_invariants_hold_for_all_archs(faults, extra, tp):

@@ -60,6 +60,9 @@ REQUIRED_KEYS = {
     "serve": {"smoke", "num_nodes", "intervals", "architectures",
               "arrival_streams", "requests_total", "scalar_s", "numpy_s",
               "bit_exact", "slo_table", "goodput_retention_ok", "telemetry"},
+    "faults": {"smoke", "num_nodes", "samples", "architectures",
+               "generators", "scalar_s", "numpy_s", "bit_exact",
+               "scenario_table", "claim_breaks", "telemetry"},
 }
 
 #: Shape of the ``telemetry`` block ``benchmarks.common.write_json`` stamps

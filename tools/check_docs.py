@@ -31,6 +31,7 @@ DOCS = ("docs/ARCHITECTURE.md", "README.md")
 #: drops the section silently un-documents what CI enforces.
 REQUIRED_HEADINGS = {
     "docs/ARCHITECTURE.md": ("## Serving under churn",
+                             "## Structured fault scenarios",
                              "## Performance & CI gates",
                              "## Observability"),
 }
